@@ -1,0 +1,63 @@
+"""Paper Fig. 2: jaxdf vs a GraphBLAS-style sparse-matrix reference.
+
+The challenge's verification path formulates every query over the traffic
+matrix A_t in sparse linear algebra.  scipy.sparse.csr_matrix plays the
+SuiteSparse-GraphBLAS role here (same formulation: 1^T A 1, |A|_0, A·1,
+|A|_0·1, max(...)), giving the paper's "data science vs GraphBLAS"
+comparison on identical hardware.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import scipy.sparse as sp
+
+from repro.core import Table, run_all_queries
+
+from .common import emit, packet_arrays, time_fn
+
+
+def graphblas_all_queries(src, dst, n_vertices: int):
+    """All Table III stats via sparse matrix ops (the reference role)."""
+    data = np.ones(len(src), np.int64)
+    A = sp.coo_matrix((data, (src, dst)), shape=(n_vertices, n_vertices)).tocsr()
+    A.sum_duplicates()
+    out_deg = np.asarray(A.sum(axis=1)).ravel()     # A·1
+    in_deg = np.asarray(A.sum(axis=0)).ravel()      # 1^T·A
+    fanout = np.diff(A.indptr)                      # |A|_0·1
+    Ac = A.tocsc()
+    fanin = np.diff(Ac.indptr)
+    return {
+        "valid_packets": int(A.sum()),
+        "unique_links": int(A.nnz),
+        "max_link_packets": int(A.data.max()) if A.nnz else 0,
+        "n_unique_sources": int((out_deg > 0).sum()),
+        "n_unique_destinations": int((in_deg > 0).sum()),
+        "n_unique_ips": int(((out_deg > 0) | (in_deg > 0)).sum()),
+        "max_source_packets": int(out_deg.max()),
+        "max_source_fanout": int(fanout.max()),
+        "max_destination_packets": int(in_deg.max()),
+        "max_destination_fanin": int(fanin.max()),
+    }
+
+
+def run(n: int = 1 << 20, iters: int = 3) -> None:
+    src, dst = packet_arrays(n)
+    n_vertices = int(max(src.max(), dst.max())) + 1
+    t = Table.from_dict({"src": jnp.asarray(src), "dst": jnp.asarray(dst)})
+
+    jall = jax.jit(run_all_queries)
+    t_jax = time_fn(jall, t, iters=iters)
+    t_gb = time_fn(lambda: graphblas_all_queries(src, dst, n_vertices), iters=iters)
+
+    res = jall(t)
+    ref = graphblas_all_queries(src, dst, n_vertices)
+    ok = all(int(getattr(res, k)) == v for k, v in ref.items())
+    emit("graphblas/jaxdf_all14", t_jax,
+         f"vs_scipy_csr={t_gb / t_jax:.2f}x correct={ok} n={n}")
+    emit("graphblas/scipy_csr_all14", t_gb, f"n={n} reference")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Paper Table II: read times by format — sequential packet binary (PCAP
+role, record-at-a-time python parse vs vectorized parse) vs columnar plq
+(Parquet role, streamed + mmap'd "cached" read).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import numpy as np
+
+from repro.data.pcaplite import parse_fast, parse_python, write_pcaplite
+from repro.data.plq import read_plq, write_plq
+from repro.data.rmat import synthetic_packets
+
+from .common import emit, time_fn
+
+
+def run(n: int = 1 << 20) -> None:
+    cols = synthetic_packets(n, scale=18, seed=0)
+    d = tempfile.mkdtemp(prefix="benchio_")
+    pcap = os.path.join(d, "x.pcpl")
+    plq = os.path.join(d, "x.plq")
+    write_pcaplite(pcap, cols)
+    write_plq(plq, cols)
+    sz_pcap = os.path.getsize(pcap)
+    sz_plq = os.path.getsize(plq)
+
+    # dpkt-role: python record loop (measured on a slice, extrapolated)
+    probe = 50_000
+    t_py = time_fn(lambda: parse_python(pcap, limit=probe), iters=2)
+    t_py_full = t_py * n / probe
+    emit("io/pcap_python_parse", t_py_full,
+         f"extrapolated_from_{probe}_records n={n} file={sz_pcap >> 20}MiB")
+
+    t_fast = time_fn(lambda: parse_fast(pcap), iters=3)
+    emit("io/pcap_vectorized_parse", t_fast, f"n={n}")
+
+    t_plq = time_fn(lambda: read_plq(plq, ["src", "dst"], mmap=False), iters=3)
+    emit("io/plq_read", t_plq, f"columns=src,dst n={n} file={sz_plq >> 20}MiB")
+
+    t_plq_mm = time_fn(lambda: read_plq(plq, ["src", "dst"], mmap=True), iters=3)
+    emit("io/plq_read_cached", t_plq_mm,
+         f"mmap speedup_vs_pcap_python={t_py_full / t_plq_mm:.0f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Beyond-paper: Pallas kernel paths vs their XLA oracles (CPU interpret
+timing is NOT indicative — the structural numbers that matter on TPU are in
+EXPERIMENTS.md §Roofline; here we verify dispatch + record call overhead).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import attention, histogram, segment_reduce
+from repro.kernels.ref import ref_attention, ref_histogram, ref_segment_matmul
+
+from .common import emit, time_fn
+
+
+def run(iters: int = 3) -> None:
+    rng = np.random.default_rng(0)
+
+    ids = jnp.asarray(rng.integers(0, 2048, 1 << 18).astype(np.int32))
+    f_x = jax.jit(lambda i: ref_histogram(i, 2048))
+    emit("kernel/histogram_xla", time_fn(f_x, ids, iters=iters), "n=262144 bins=2048")
+
+    x = jnp.asarray(rng.standard_normal((1 << 15, 128)).astype(np.float32))
+    seg = jnp.asarray(rng.integers(0, 1024, 1 << 15).astype(np.int32))
+    f_s = jax.jit(lambda x, s: ref_segment_matmul(x, s, 1024))
+    emit("kernel/segment_reduce_xla", time_fn(f_s, x, seg, iters=iters),
+         "n=32768 d=128 segs=1024")
+
+    q = jnp.asarray(rng.standard_normal((1, 8, 1024, 128)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((1, 2, 1024, 128)).astype(np.float32))
+    f_a = jax.jit(lambda q, k: ref_attention(q, k, k, causal=True))
+    emit("kernel/attention_xla", time_fn(f_a, q, k, iters=iters),
+         "B=1 Hq=8 Hkv=2 L=1024 D=128 (GQA causal)")
+
+
+if __name__ == "__main__":
+    run()

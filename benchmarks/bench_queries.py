@@ -1,0 +1,79 @@
+"""Paper Fig. 1 + Table III: per-query speedup of jaxdf (jit, XLA) over the
+sequential NumPy oracle (the single-core "Pandas" role).
+
+Reports each of the challenge queries individually (as the paper's Fig. 1
+does), the all-14-queries pipeline, and the kernel-accelerated variants.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Table, run_all_queries
+from repro.core import queries as Q
+from repro.core.ref import ref_run_all_queries, ref_traffic_matrix
+
+from .common import emit, packet_arrays, time_fn
+
+QUERIES = {
+    "valid_packets": (Q.valid_packets, lambda s, d: int(len(s))),
+    "unique_links": (Q.unique_links,
+                     lambda s, d: len(ref_traffic_matrix(s, d)[0])),
+    "max_link_packets": (Q.max_link_packets,
+                         lambda s, d: int(ref_traffic_matrix(s, d)[2].max())),
+    "unique_sources": (lambda t: Q.unique_sources(t).n_unique,
+                       lambda s, d: len(np.unique(s))),
+    "unique_ips": (lambda t: Q.unique_ips(t).n_unique,
+                   lambda s, d: len(np.unique(np.concatenate([s, d])))),
+    "max_source_packets": (Q.max_source_packets,
+                           lambda s, d: int(np.unique(s, return_counts=True)[1].max())),
+    "max_source_fanout": (Q.max_source_fanout,
+                          lambda s, d: int(np.unique(
+                              ref_traffic_matrix(s, d)[0], return_counts=True)[1].max())),
+    "max_dest_fanin": (Q.max_destination_fanin,
+                       lambda s, d: int(np.unique(
+                           ref_traffic_matrix(s, d)[1], return_counts=True)[1].max())),
+}
+
+
+def run(n: int = 1 << 20, iters: int = 3) -> None:
+    src, dst = packet_arrays(n)
+    t = Table.from_dict({"src": jnp.asarray(src), "dst": jnp.asarray(dst)})
+
+    for name, (jq, refq) in QUERIES.items():
+        jf = jax.jit(jq)
+        t_jax = time_fn(jf, t, iters=iters)
+        t_ref = time_fn(lambda: refq(src, dst), iters=max(iters - 1, 1))
+        got = int(jf(t)) if np.ndim(jf(t)) == 0 else None
+        want = refq(src, dst)
+        ok = (got == want) if got is not None else True
+        emit(f"query/{name}", t_jax,
+             f"speedup_vs_numpy={t_ref / t_jax:.1f}x correct={ok}")
+
+    jall = jax.jit(run_all_queries)
+    t_all = time_fn(jall, t, iters=iters)
+    t_ref_all = time_fn(lambda: ref_run_all_queries(src, dst), iters=1)
+    res = jall(t)
+    ref = ref_run_all_queries(src, dst)
+    ok = all(int(getattr(res, k)) == v for k, v in ref.items())
+    emit("query/all14_pipeline", t_all,
+         f"speedup_vs_numpy={t_ref_all / t_all:.1f}x correct={ok} n={n}")
+
+    # multi-temporal (Kepner et al. [14]): all stats × 16 windows, one pass
+    from repro.core.temporal import windowed_queries
+
+    ts = jnp.asarray(np.sort(np.random.default_rng(0).integers(0, 1 << 20, n))
+                     .astype(np.int32))
+    tw = Table.from_dict({"src": jnp.asarray(src), "dst": jnp.asarray(dst),
+                          "ts": ts})
+    jwin = jax.jit(lambda t: windowed_queries(t, (1 << 20) // 16, 16))
+    t_win = time_fn(jwin, tw, iters=iters)
+    emit("query/windowed16_pipeline", t_win,
+         f"16 windows fused, {t_win / t_all:.2f}x of single-window cost n={n}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Benchmark helpers: timing, CSV emission, shared synthetic inputs."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.data.rmat import synthetic_packets
+
+__all__ = ["time_fn", "emit", "packet_arrays"]
+
+
+def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 1) -> float:
+    """Median wall seconds per call (jax results block_until_ready)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out) if _is_jax(out) else None
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        if _is_jax(out):
+            jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def _is_jax(x) -> bool:
+    return any(isinstance(l, jax.Array) for l in jax.tree.leaves(x))
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    """CSV row: name,us_per_call,derived."""
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+
+
+_CACHE: Dict = {}
+
+
+def packet_arrays(n: int, scale: int = 18, seed: int = 0):
+    key = (n, scale, seed)
+    if key not in _CACHE:
+        cols = synthetic_packets(n, scale=scale, seed=seed)
+        _CACHE[key] = (cols["src"].astype(np.int32), cols["dst"].astype(np.int32))
+    return _CACHE[key]

@@ -1,0 +1,54 @@
+"""Benchmark harness — one section per paper table/figure.
+
+Emits ``name,us_per_call,derived`` CSV rows:
+  io/*           paper Table II   (format read times)
+  query/*        paper Fig. 1 + Table III (per-query speedups vs numpy)
+  graphblas/*    paper Fig. 2     (vs scipy-CSR GraphBLAS-style reference)
+  anonymize/*    paper §IV        (shuffle vs HashGraph-style vs numpy)
+  kernel/*       beyond-paper     (kernel-path dispatch)
+  distributed/*  beyond-paper     (shard_map pipeline at 8 shards)
+
+``python -m benchmarks.run [--quick] [--n N] [--only PREFIX]``
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=1 << 20)
+    ap.add_argument("--quick", action="store_true", help="n = 2^17")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    n = (1 << 17) if args.quick else args.n
+
+    from . import (bench_anonymize, bench_distributed, bench_graphblas,
+                   bench_io, bench_kernels, bench_queries)
+
+    sections = [
+        ("io", lambda: bench_io.run(n=n)),
+        ("query", lambda: bench_queries.run(n=n)),
+        ("graphblas", lambda: bench_graphblas.run(n=n)),
+        ("anonymize", lambda: bench_anonymize.run(n=n)),
+        ("kernel", bench_kernels.run),
+        ("distributed", bench_distributed.run),
+    ]
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn in sections:
+        if args.only and not name.startswith(args.only):
+            continue
+        try:
+            fn()
+        except Exception:
+            failed += 1
+            print(f"{name}/SECTION_FAILED,0,{traceback.format_exc(limit=1)!r}",
+                  flush=True)
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Example: SchNet energy regression on batched synthetic molecules.
+
+Exercises the GNN stack end-to-end: batched small graphs (the ``molecule``
+shape regime), segment-op message passing, and the shared training loop.
+The planted target is the pairwise Lennard-Jones-like energy of each random
+conformation, so the loss has real geometric signal.
+
+    PYTHONPATH=src python examples/gnn_molecules.py --steps 200
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import gnn as G
+from repro.train import AdamWConfig, Trainer
+
+
+def make_batch(rng, batch=32, n_atoms=12, n_types=6):
+    """Random conformations + planted pairwise energy target."""
+    N = batch * n_atoms
+    types = rng.integers(1, n_types, (N, 1)).astype(np.int32)
+    pos = rng.standard_normal((N, 3)).astype(np.float32) * 1.5
+    gid = np.repeat(np.arange(batch, dtype=np.int32), n_atoms)
+    # fully-connected intra-molecule edges (directed both ways)
+    offs = np.arange(batch)[:, None, None] * n_atoms
+    ij = np.stack(np.meshgrid(np.arange(n_atoms), np.arange(n_atoms)), -1)
+    ij = ij[ij[..., 0] != ij[..., 1]]  # (n_atoms*(n_atoms-1), 2)
+    senders = (offs + ij[None, :, 0]).reshape(-1).astype(np.int32)
+    receivers = (offs + ij[None, :, 1]).reshape(-1).astype(np.int32)
+    d = np.linalg.norm(pos[senders] - pos[receivers], axis=-1)
+    e_pair = 4.0 * ((0.8 / d) ** 12 - (0.8 / d) ** 6).clip(-5, 5)
+    target = np.zeros(batch, np.float32)
+    np.add.at(target, gid[receivers], e_pair.astype(np.float32) / 2)
+    return {
+        "nodes": types, "positions": pos, "senders": senders,
+        "receivers": receivers, "graph_ids": gid,
+        "target": target[:, None] / 10.0,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = G.SchNetConfig(n_interactions=3, d_hidden=64, n_rbf=50, cutoff=6.0)
+    params = G.schnet_init(jax.random.key(0), cfg)
+    n = sum(p.size for p in jax.tree.leaves(params))
+    print(f"SchNet: {n / 1e3:.0f}k params, batch={args.batch} molecules")
+
+    def loss_fn(p, b):
+        g = G.Graph(nodes=b["nodes"], senders=b["senders"],
+                    receivers=b["receivers"], positions=b["positions"],
+                    graph_ids=b["graph_ids"], n_graphs=args.batch)
+        pred = G.schnet_apply(p, cfg, g)
+        return jnp.mean((pred - b["target"]) ** 2), {}
+
+    def batches():
+        step = 0
+        while True:
+            rng = np.random.default_rng((42, step))
+            yield make_batch(rng, batch=args.batch)
+            step += 1
+
+    trainer = Trainer(loss_fn, AdamWConfig(lr=2e-3, warmup_steps=20,
+                                           total_steps=args.steps))
+    state = trainer.init_state(params)
+    t0 = time.time()
+    state, hist = trainer.run(state, batches(), args.steps, log_every=40)
+    print(f"done in {time.time() - t0:.0f}s — final MSE {hist['loss']:.5f}")
+    assert hist["loss"] < 0.5
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps.
+
+Uses the real production substrate — deterministic prefetching pipeline,
+AdamW + WSD schedule, atomic checkpointing with resume, straggler watchdog —
+on a granite-style GQA architecture scaled to ~100M params for CPU.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+import argparse
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import Prefetcher, lm_batches
+from repro.models.transformer import TransformerConfig, init_params, loss_fn
+from repro.train import AdamWConfig, Trainer
+
+
+def make_config() -> TransformerConfig:
+    # ~100M params: 12L × d512 (GQA 8/2) + 32k vocab
+    return TransformerConfig(
+        name="granite-100m", n_layers=12, d_model=512, n_heads=8,
+        n_kv_heads=2, d_ff=1536, vocab=32_000, dtype=jnp.float32,
+        remat=False,
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+    ckpt = args.ckpt_dir or os.path.join(tempfile.mkdtemp(), "ckpt")
+
+    cfg = make_config()
+    params = init_params(jax.random.key(0), cfg)
+    n = sum(p.size for p in jax.tree.leaves(params))
+    print(f"model: {cfg.name}  params={n / 1e6:.1f}M  "
+          f"tokens/step={args.batch * args.seq:,}")
+
+    trainer = Trainer(
+        lambda p, b: loss_fn(p, cfg, b["tokens"], b["labels"]),
+        AdamWConfig(lr=6e-4, warmup_steps=30, total_steps=args.steps,
+                    schedule="wsd", decay_fraction=0.15),
+        ckpt_dir=ckpt, ckpt_every=100,
+    )
+    state = trainer.init_state(params)
+    batches = Prefetcher(lm_batches(args.batch, args.seq, cfg.vocab, seed=0))
+    t0 = time.time()
+    state, hist = trainer.run(state, batches, args.steps, log_every=25)
+    dt = time.time() - t0
+    print(f"done in {dt:.0f}s — {args.steps * args.batch * args.seq / dt:,.0f} tok/s, "
+          f"final loss {hist['loss']:.4f}, checkpoints in {ckpt}")
+    assert hist["loss"] < 7.0, "loss did not move"
+
+
+if __name__ == "__main__":
+    main()

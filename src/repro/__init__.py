@@ -1,0 +1,4 @@
+"""repro — Anonymized Network Sensing Graph Challenge as data-science ETL,
+reproduced and scaled out in JAX/TPU.  See README.md / DESIGN.md."""
+
+__version__ = "1.0.0"

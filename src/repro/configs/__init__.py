@@ -1,0 +1,43 @@
+"""Architecture registry: ``--arch <id>`` resolution for launch/benchmarks.
+
+10 assigned architectures + the paper's own pipeline (network-sensing).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from .common import ArchSpec, Cell, MeshAxes, MULTI_POD, SINGLE_POD
+
+_MODULES = {
+    "qwen2-72b": "qwen2_72b",
+    "minicpm-2b": "minicpm_2b",
+    "granite-8b": "granite_8b",
+    "arctic-480b": "arctic_480b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "schnet": "schnet",
+    "pna": "pna",
+    "egnn": "egnn",
+    "graphsage-reddit": "graphsage_reddit",
+    "xdeepfm": "xdeepfm",
+    "network-sensing": "network_sensing",
+}
+
+ASSIGNED_ARCHS = tuple(a for a in _MODULES if a != "network-sensing")
+ALL_ARCHS = tuple(_MODULES)
+
+
+def get_spec(arch: str) -> ArchSpec:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    import importlib
+
+    mod = importlib.import_module(f".{_MODULES[arch]}", __package__)
+    return mod.SPEC
+
+
+def all_specs() -> Dict[str, ArchSpec]:
+    return {a: get_spec(a) for a in ALL_ARCHS}
+
+
+__all__ = ["ArchSpec", "Cell", "MeshAxes", "MULTI_POD", "SINGLE_POD",
+           "ASSIGNED_ARCHS", "ALL_ARCHS", "get_spec", "all_specs"]

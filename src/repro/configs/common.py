@@ -1,0 +1,297 @@
+"""Shared config machinery: ArchSpec protocol + LM sharding/step builders.
+
+Every ``configs/<arch>.py`` exposes ``SPEC: ArchSpec``.  An ArchSpec knows,
+for each of its input shapes, how to build:
+
+  * ``abstract_state()``   — ShapeDtypeStruct pytrees (no allocation),
+  * ``state_pspecs(mp)``   — congruent PartitionSpec pytrees,
+  * ``build_cell(shape)``  — (step_fn, abstract_args, arg_pspecs) for the
+                             dry-run's ``jit(...).lower().compile()``,
+  * ``smoke()``            — a reduced config running a real step on CPU.
+
+Sharding policy (DESIGN.md §5): TP over "model", FSDP over "data", pure DP
+over "pod"; params never shard over "pod".  ``mp.dp_axes`` is ("data",) or
+("pod","data").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..models import transformer as T
+from ..train.optimizer import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["MeshAxes", "Cell", "ArchSpec", "lm_param_pspecs", "lm_spec",
+           "abstract_adamw", "SINGLE_POD", "MULTI_POD"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    """Logical axis layout of the target mesh (+ the Mesh itself when built)."""
+    dp_axes: Tuple[str, ...] = ("data",)
+    tp_axis: str = "model"
+    multi_pod: bool = False
+    mesh: Any = None  # concrete jax Mesh — needed by shard_map-based cells
+
+    @property
+    def all_axes(self) -> Tuple[str, ...]:
+        return (*self.dp_axes, self.tp_axis)
+
+    @property
+    def dp(self):  # batch-sharding spec component
+        return self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
+
+    @property
+    def fsdp(self) -> str:
+        return "data"
+
+
+SINGLE_POD = MeshAxes(dp_axes=("data",))
+MULTI_POD = MeshAxes(dp_axes=("pod", "data"), multi_pod=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    """One dry-runnable (arch × shape) unit."""
+    arch: str
+    shape: str
+    kind: str                         # train | prefill | decode | serve
+    step_fn: Callable                 # jit-able
+    abstract_args: Tuple              # ShapeDtypeStruct pytrees
+    arg_pspecs: Tuple                 # congruent PartitionSpec pytrees
+    donate: Tuple[int, ...] = ()
+    note: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch: str
+    family: str                                  # lm | gnn | recsys
+    shapes: Tuple[str, ...]
+    build_cell: Callable[[str, MeshAxes], Optional[Cell]]  # None => skipped
+    smoke: Callable[[], Dict[str, Any]]
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+# ---------------------------------------------------------------- optimizer
+
+def abstract_adamw(abstract_params, state_dtype: str = "float32"):
+    return jax.eval_shape(
+        lambda p: adamw_init(p, state_dtype), abstract_params)
+
+
+def adamw_pspecs(param_pspecs):
+    return {
+        "step": P(),
+        "m": param_pspecs,
+        "v": param_pspecs,
+    }
+
+
+# ------------------------------------------------------------ LM arch support
+
+# Production mesh axis sizes (launch/mesh.py) — used for divisibility checks
+AXIS_SIZES = {"pod": 2, "data": 16, "model": 16}
+
+
+def _fits(axis, dim: int):
+    """Use ``axis`` only if it divides ``dim`` (else replicate that dim)."""
+    if axis is None:
+        return None
+    if isinstance(axis, tuple):
+        size = 1
+        for a in axis:
+            size *= AXIS_SIZES.get(a, 1)
+    else:
+        size = AXIS_SIZES.get(axis, 1)
+    return axis if dim % size == 0 else None
+
+
+def lm_param_pspecs(cfg: T.TransformerConfig, mp: MeshAxes, abstract_params,
+                    expert_shard: str = "auto"):
+    """PartitionSpec tree congruent to init_params(cfg) output.
+
+    TP over mp.tp_axis on the head/ff/vocab dims, FSDP over "data" on the
+    other big dim.  Experts go expert-parallel on the tp axis when the
+    expert count divides it cleanly (arctic, 128e); otherwise experts stay
+    replicated and the ffn dims are tensor-parallel (mixtral, 8e < 16).
+    Dims not divisible by their axis (minicpm's 122753 vocab) fall back to
+    replicated — checked via AXIS_SIZES.
+    """
+    tp, fs = mp.tp_axis, mp.fsdp
+    expert_parallel = bool(cfg.moe) and cfg.moe.n_experts % AXIS_SIZES[tp] == 0
+
+    def spec_for(path, leaf) -> P:
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        key = "/".join(str(n) for n in names)
+        sh = leaf.shape
+        nd = len(sh)
+
+        def ps(*axes):  # divisibility-guarded PartitionSpec
+            return P(*(_fits(a, d) for a, d in zip(axes, sh)))
+
+        if "embed" in key:
+            return ps(tp, fs)                      # (V, d)
+        if "lm_head" in key:
+            return ps(fs, tp)                      # (d, V)
+        if "final_norm" in key:
+            return P(None)
+        # --- stacked layer params: leading dim = n_layers ---
+        if "moe" in key:
+            if "router" in key:
+                return ps(None, fs, None) if nd == 3 else P(None, None)
+            if "experts" in key:                   # (L, E, ...) swiglu leaves
+                if expert_shard == "ff2d":
+                    # 2-D shard the ff dim over (data, model): contraction
+                    # dims stay unsharded for gate/up => no activation
+                    # all-reduce; down-proj partials reduce over ff
+                    if "down" in key:              # (L, E, ff, d)
+                        return ps(None, None, (fs, tp), None)
+                    return ps(None, None, None, (fs, tp))
+                if "down" in key:                  # (L, E, ff, d)
+                    return (ps(None, tp, None, fs) if expert_parallel
+                            else ps(None, None, tp, fs))
+                return (ps(None, tp, fs, None) if expert_parallel
+                        else ps(None, None, fs, tp))   # gate/up (L, E, d, ff)
+            if "dense_residual" in key:
+                if "down" in key:
+                    return ps(None, tp, fs)        # (L, ff, d)
+                return ps(None, fs, tp)            # (L, d, ff)
+        if "wq" in key or "wk" in key or "wv" in key:
+            if nd == 3:
+                return ps(None, fs, tp)            # (L, d, H*dh)
+            return ps(None, tp)                    # bias (L, H*dh)
+        if "wo" in key:
+            return ps(None, tp, fs)                # (L, H*dh, d)
+        if "mlp" in key and nd == 3:
+            if "down" in key:
+                return ps(None, tp, fs)            # (L, ff, d)
+            return ps(None, fs, tp)                # gate/up (L, d, ff)
+        return P(*([None] * nd))                   # norms / scalars
+
+    return jax.tree_util.tree_map_with_path(spec_for, abstract_params)
+
+
+def _kv_cache_pspecs(cfg: T.TransformerConfig, mp: MeshAxes, batch: int):
+    """(layers, B, Hkv, S, dh): shard B over dp when possible, S over tp
+    (flash-decoding-style sequence sharding); B==1 long-context shards S over
+    everything."""
+    if batch == 1:
+        seq_axes = (*mp.dp_axes, mp.tp_axis)
+        kv = P(None, None, None, seq_axes, None)
+    else:
+        kv = P(None, mp.dp, None, mp.tp_axis, None)
+    return {"k": kv, "v": kv, "pos": P()}
+
+
+def lm_spec(
+    arch: str,
+    cfg_factory: Callable[[], T.TransformerConfig],
+    smoke_cfg_factory: Callable[[], T.TransformerConfig],
+    full_attention_only: bool,
+    opt: Optional[AdamWConfig] = None,
+    expert_shard: str = "auto",
+) -> ArchSpec:
+    """Build the ArchSpec shared by all five LM architectures."""
+    opt = opt or AdamWConfig(lr=3e-4, schedule="cosine", total_steps=10_000)
+    SHAPES = {
+        "train_4k": dict(kind="train", seq=4096, batch=256),
+        "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+        "decode_32k": dict(kind="decode", seq=32768, batch=128),
+        "long_500k": dict(kind="decode", seq=524288, batch=1),
+    }
+
+    def build_cell(shape: str, mp: MeshAxes) -> Optional[Cell]:
+        info = SHAPES[shape]
+        if shape == "long_500k" and full_attention_only:
+            return None  # quadratic attention at 512k — skipped per spec
+        cfg = cfg_factory()
+        if info["kind"] in ("train", "prefill"):
+            # sequence-parallel activation sharding (seq dim over tp axis);
+            # decode has seq length 1 — no constraint there
+            cfg = dataclasses.replace(cfg, act_pspec=(mp.dp, mp.tp_axis, None))
+        a_params = jax.eval_shape(lambda k: T.init_params(k, cfg), jax.random.key(0))
+        p_specs = lm_param_pspecs(cfg, mp, a_params, expert_shard=expert_shard)
+        B, S = info["batch"], info["seq"]
+
+        if info["kind"] == "train":
+            a_opt = abstract_adamw(a_params, opt.state_dtype)
+            o_specs = adamw_pspecs(p_specs)
+            tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+            tok_spec = P(mp.dp, None)
+
+            def train_step(params, opt_state, tokens, labels):
+                (loss, m), grads = jax.value_and_grad(
+                    T.loss_fn, has_aux=True
+                )(params, cfg, tokens, labels)
+                params, opt_state, om = adamw_update(grads, opt_state, params, opt)
+                return params, opt_state, {"loss": loss, **m, **om}
+
+            return Cell(
+                arch=arch, shape=shape, kind="train", step_fn=train_step,
+                abstract_args=(a_params, a_opt, tok, tok),
+                arg_pspecs=(p_specs, o_specs, tok_spec, tok_spec),
+                donate=(0, 1),
+            )
+
+        if info["kind"] == "prefill":
+            # prompt fills the whole cache (benchmark semantics)
+            cache = jax.eval_shape(
+                lambda: T.init_kv_cache(cfg, B, S)
+            )
+            c_specs = _kv_cache_pspecs(cfg, mp, B)
+            tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+
+            def prefill_step(params, tokens, cache):
+                return T.prefill(params, cfg, tokens, cache)
+
+            return Cell(
+                arch=arch, shape=shape, kind="prefill", step_fn=prefill_step,
+                abstract_args=(a_params, tok, cache),
+                arg_pspecs=(p_specs, P(mp.dp, None), c_specs),
+                donate=(2,),
+            )
+
+        # decode: one new token against a KV cache of length S
+        cache = jax.eval_shape(lambda: T.init_kv_cache(cfg, B, S))
+        c_specs = _kv_cache_pspecs(cfg, mp, B)
+        tok = jax.ShapeDtypeStruct((B,), jnp.int32)
+        tok_spec = P(mp.dp) if B > 1 else P(None)
+
+        def decode(params, tokens, cache):
+            return T.decode_step(params, cfg, tokens, cache)
+
+        return Cell(
+            arch=arch, shape=shape, kind="decode", step_fn=decode,
+            abstract_args=(a_params, tok, cache),
+            arg_pspecs=(p_specs, tok_spec, c_specs),
+            donate=(2,),
+            note="serve_step (single token, static KV cache)",
+        )
+
+    def smoke() -> Dict[str, Any]:
+        import numpy as np
+
+        cfg = smoke_cfg_factory()
+        params = T.init_params(jax.random.key(0), cfg)
+        toks = jax.random.randint(jax.random.key(1), (2, 16), 0, cfg.vocab)
+        loss, m = T.loss_fn(params, cfg, toks[:, :-1], toks[:, 1:])
+        logits, _ = T.forward(params, cfg, toks)
+        cache = T.init_kv_cache(cfg, 2, 16)
+        lg, cache = T.prefill(params, cfg, toks, cache)
+        assert logits.shape == (2, 16, cfg.vocab)
+        assert not np.isnan(np.asarray(logits)).any(), "NaN logits"
+        assert not np.isnan(float(loss)), "NaN loss"
+        return {"loss": float(loss), "logits_shape": logits.shape,
+                "decode_logits_shape": lg.shape}
+
+    return ArchSpec(
+        arch=arch, family="lm",
+        shapes=("train_4k", "prefill_32k", "decode_32k", "long_500k"),
+        build_cell=build_cell, smoke=smoke,
+        meta={"full_attention_only": full_attention_only},
+    )

@@ -1,0 +1,154 @@
+"""GNN config machinery: the 4 graph shapes × 4 architectures.
+
+Shape regimes (assignment):
+  full_graph_sm  cora-size full batch   (2,708 n / 10,556 e / 1,433 f)
+  minibatch_lg   reddit sampled batch   (232,965 n graph; 1,024 seeds, 15-10)
+  ogb_products   full-batch large       (2,449,029 n / 61,859,140 e / 100 f)
+  molecule       batched small graphs   (30 n / 64 e × batch 128)
+
+Distribution: GNN hidden dims are small (64–128) so params replicate; the
+DATA shards — node/edge tables are row-sharded like the paper's packet table
+(same hypersparse regime, DESIGN.md §4).  Capacities are padded so every
+row count divides both the 256-device and 512-device meshes.  The sampled
+minibatch shape matches data/sampler.py's static output exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..models import gnn as G
+from ..train.optimizer import AdamWConfig, adamw_init, adamw_update
+from .common import ArchSpec, Cell, MeshAxes, abstract_adamw, adamw_pspecs
+
+__all__ = ["GNN_SHAPES", "gnn_spec"]
+
+# capacities padded to lcm-divisibility for 256- and 512-way meshes
+GNN_SHAPES = {
+    "full_graph_sm": dict(n_nodes=2_816, n_edges=10_752, d_feat=1_433,
+                          n_graphs=1, n_classes=7,
+                          raw="n_nodes=2708 n_edges=10556 d_feat=1433"),
+    "minibatch_lg": dict(n_nodes=170_496, n_edges=168_960, d_feat=602,
+                         n_graphs=1, n_classes=41, n_seeds=1_024,
+                         raw="reddit 232,965n/114.6Me; batch=1024 fanout 15-10"),
+    "ogb_products": dict(n_nodes=2_449_920, n_edges=61_865_984, d_feat=100,
+                         n_graphs=1, n_classes=47,
+                         raw="n_nodes=2,449,029 n_edges=61,859,140 d_feat=100"),
+    "molecule": dict(n_nodes=4_096, n_edges=8_192, d_feat=16,
+                     n_graphs=128, n_classes=1,
+                     raw="30n/64e per graph × batch 128"),
+}
+
+
+def _abstract_graph(arch: str, info: dict) -> G.Graph:
+    n, e = info["n_nodes"], info["n_edges"]
+    geometric = arch in ("schnet", "egnn")
+    atom_input = arch == "schnet"
+    nodes = (jax.ShapeDtypeStruct((n, 1), jnp.int32) if atom_input
+             else jax.ShapeDtypeStruct((n, info["d_feat"]), jnp.float32))
+    return G.Graph(
+        nodes=nodes,
+        senders=jax.ShapeDtypeStruct((e,), jnp.int32),
+        receivers=jax.ShapeDtypeStruct((e,), jnp.int32),
+        positions=jax.ShapeDtypeStruct((n, 3), jnp.float32) if geometric else None,
+        graph_ids=(jax.ShapeDtypeStruct((n,), jnp.int32)
+                   if info["n_graphs"] > 1 else None),
+        n_graphs=info["n_graphs"],
+    )
+
+
+def _graph_pspecs(g: G.Graph, mp: MeshAxes, shard_nodes: bool) -> G.Graph:
+    """Row-shard edge tables over every axis; node tables over dp when big."""
+    edge_spec = P(mp.all_axes)
+    node_rows = mp.dp if shard_nodes else None
+    return G.Graph(
+        nodes=P(node_rows, None),
+        senders=edge_spec,
+        receivers=edge_spec,
+        positions=None if g.positions is None else P(node_rows, None),
+        graph_ids=None if g.graph_ids is None else P(node_rows),
+        n_graphs=g.n_graphs,
+    )
+
+
+def gnn_spec(
+    arch: str,
+    make_cfg: Callable[[dict], Any],      # info -> model config
+    init_fn: Callable,                    # (key, cfg) -> params
+    apply_fn: Callable,                   # (params, cfg, graph) -> output
+    loss_kind: str,                       # "node_class" | "graph_reg"
+    make_smoke: Callable[[], Dict[str, Any]],
+) -> ArchSpec:
+    opt = AdamWConfig(lr=1e-3, schedule="cosine", total_steps=5_000,
+                      weight_decay=0.0)
+
+    def build_cell(shape: str, mp: MeshAxes) -> Optional[Cell]:
+        info = GNN_SHAPES[shape]
+        cfg = make_cfg(info)
+        a_graph = _abstract_graph(arch, info)
+        g_specs = _graph_pspecs(a_graph, mp, shard_nodes=info["n_nodes"] >= 65536)
+        a_params = jax.eval_shape(lambda k: init_fn(k, cfg), jax.random.key(0))
+        p_specs = jax.tree.map(lambda l: P(*([None] * l.ndim)), a_params)
+        a_opt = abstract_adamw(a_params)
+        o_specs = adamw_pspecs(p_specs)
+
+        if loss_kind == "node_class":
+            n_lab = info.get("n_seeds", info["n_nodes"])
+            a_labels = jax.ShapeDtypeStruct((n_lab,), jnp.int32)
+            a_seeds = jax.ShapeDtypeStruct((n_lab,), jnp.int32)
+            lab_spec, seed_spec = P(None), P(None)
+
+            def loss_fn(params, graph, seeds, labels):
+                logits = apply_fn(params, cfg, graph)     # (N, C)
+                sel = logits[seeds]
+                loss = -jnp.mean(
+                    jnp.take_along_axis(
+                        jax.nn.log_softmax(sel.astype(jnp.float32), -1),
+                        labels[:, None], axis=1)[:, 0]
+                )
+                return loss, {"acc": jnp.mean(
+                    (jnp.argmax(sel, -1) == labels).astype(jnp.float32))}
+
+            def train_step(params, opt_state, graph, seeds, labels):
+                (loss, m), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, graph, seeds, labels)
+                params, opt_state, om = adamw_update(grads, opt_state, params, opt)
+                return params, opt_state, {"loss": loss, **m, **om}
+
+            return Cell(
+                arch=arch, shape=shape, kind="train", step_fn=train_step,
+                abstract_args=(a_params, a_opt, a_graph, a_seeds, a_labels),
+                arg_pspecs=(p_specs, o_specs, g_specs, seed_spec, lab_spec),
+                donate=(0, 1), note=info["raw"],
+            )
+
+        # graph-level regression (schnet energies, pna/egnn targets)
+        a_target = jax.ShapeDtypeStruct((info["n_graphs"], 1), jnp.float32)
+
+        def loss_fn(params, graph, target):
+            out = apply_fn(params, cfg, graph)
+            out = out[0] if isinstance(out, tuple) else out  # egnn -> (out, x)
+            loss = jnp.mean((out.astype(jnp.float32) - target) ** 2)
+            return loss, {}
+
+        def train_step(params, opt_state, graph, target):
+            (loss, m), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, graph, target)
+            params, opt_state, om = adamw_update(grads, opt_state, params, opt)
+            return params, opt_state, {"loss": loss, **om}
+
+        return Cell(
+            arch=arch, shape=shape, kind="train", step_fn=train_step,
+            abstract_args=(a_params, a_opt, a_graph, a_target),
+            arg_pspecs=(p_specs, o_specs, g_specs, P(None, None)),
+            donate=(0, 1), note=info["raw"],
+        )
+
+    return ArchSpec(
+        arch=arch, family="gnn", shapes=tuple(GNN_SHAPES),
+        build_cell=build_cell, smoke=make_smoke,
+    )

@@ -1,0 +1,34 @@
+"""egnn [arXiv:2102.09844]: 4L d=64, E(n)-equivariant (tested in
+tests/test_models.py::test_egnn_equivariance)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import gnn as G
+from .common_gnn import gnn_spec
+
+ARCH_ID = "egnn"
+
+
+def make_cfg(info):
+    return G.EGNNConfig(name=ARCH_ID, n_layers=4, d_hidden=64,
+                        d_in=info["d_feat"])
+
+
+def smoke():
+    cfg = G.EGNNConfig(name=ARCH_ID, n_layers=2, d_hidden=16, d_in=8)
+    params = G.egnn_init(jax.random.key(0), cfg)
+    rng = np.random.default_rng(0)
+    g = G.Graph(nodes=jnp.asarray(rng.standard_normal((64, 8)).astype(np.float32)),
+                senders=jnp.asarray(rng.integers(0, 64, 256).astype(np.int32)),
+                receivers=jnp.asarray(rng.integers(0, 64, 256).astype(np.int32)),
+                positions=jnp.asarray(rng.standard_normal((64, 3)).astype(np.float32)),
+                graph_ids=jnp.asarray((np.arange(64) // 32).astype(np.int32)),
+                n_graphs=2)
+    out, x = G.egnn_apply(params, cfg, g)
+    assert out.shape == (2, 1) and x.shape == (64, 3)
+    assert not np.isnan(np.asarray(out)).any()
+    return {"out_shape": tuple(out.shape)}
+
+
+SPEC = gnn_spec(ARCH_ID, make_cfg, G.egnn_init, G.egnn_apply, "graph_reg", smoke)

@@ -1,0 +1,44 @@
+"""graphsage-reddit [arXiv:1706.02216]: 2L mean-agg, d=128, fanout 25-10.
+
+Node classification; minibatch_lg uses the real neighbor sampler
+(data/sampler.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import gnn as G
+from .common_gnn import gnn_spec
+
+ARCH_ID = "graphsage-reddit"
+
+
+def make_cfg(info):
+    return G.GraphSAGEConfig(
+        name=ARCH_ID, n_layers=2, d_hidden=128, aggregator="mean",
+        sample_sizes=(25, 10), d_in=info["d_feat"], n_classes=info["n_classes"],
+    )
+
+
+def smoke():
+    from ..data.rmat import rmat_edges
+    from ..data.sampler import build_csr, sample_subgraph
+
+    cfg = G.GraphSAGEConfig(name=ARCH_ID, d_in=8, n_classes=5, d_hidden=16)
+    params = G.graphsage_init(jax.random.key(0), cfg)
+    s, r = rmat_edges(9, 4096, seed=0)
+    csr = build_csr(s.astype(np.int64), r.astype(np.int64), 512)
+    feats = np.random.default_rng(0).standard_normal((512, 8)).astype(np.float32)
+    labels = np.random.default_rng(1).integers(0, 5, 512)
+    sub = sample_subgraph(csr, np.arange(16), [5, 3], feats, labels, seed=1)
+    g = G.Graph(nodes=jnp.asarray(sub["nodes"]),
+                senders=jnp.asarray(sub["senders"]),
+                receivers=jnp.asarray(sub["receivers"]))
+    logits = G.graphsage_apply(params, cfg, g)
+    sel = logits[jnp.asarray(sub["seed_local"])]
+    assert sel.shape == (16, 5)
+    assert not np.isnan(np.asarray(sel)).any()
+    return {"logits_shape": tuple(sel.shape)}
+
+
+SPEC = gnn_spec(ARCH_ID, make_cfg, G.graphsage_init, G.graphsage_apply,
+                "node_class", smoke)

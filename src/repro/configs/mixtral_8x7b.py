@@ -1,0 +1,44 @@
+"""mixtral-8x7b [arXiv:2401.04088; hf]: 8-expert top-2 MoE + sliding-window
+attention. 32L d_model=4096 32H (kv=8) d_ff=14336 vocab=32000, SWA 4096.
+
+SWA is sub-quadratic in live attention work -> long_500k runs (decode reads
+at most `window` keys' worth of useful context; cache layout stays full
+length, masked)."""
+import jax.numpy as jnp
+
+from ..models.moe import MoEConfig
+from ..models.transformer import TransformerConfig
+from .common import lm_spec
+
+ARCH_ID = "mixtral-8x7b"
+
+
+def full_config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID, n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+        d_ff=14336, vocab=32000, sliding_window=4096, dtype=jnp.bfloat16,
+        moe=MoEConfig(n_experts=8, top_k=2, d_ff=14336, capacity_factor=1.25),
+    )
+
+
+def smoke_config() -> TransformerConfig:
+    return TransformerConfig(
+        name=ARCH_ID + "-smoke", n_layers=2, d_model=64, n_heads=8,
+        n_kv_heads=2, d_ff=128, vocab=128, sliding_window=8,
+        dtype=jnp.float32, remat=False,
+        moe=MoEConfig(n_experts=4, top_k=2, d_ff=96),
+    )
+
+
+SPEC = lm_spec(ARCH_ID, full_config, smoke_config, full_attention_only=False)
+
+
+def optimized_config() -> TransformerConfig:
+    """Beyond-paper adopted variant (EXPERIMENTS.md §Perf cell 1):
+    shard-local batched MoE dispatch + capacity factor 1.0
+    (t_coll −30%, t_comp −17% vs the faithful baseline)."""
+    import dataclasses as _dc
+
+    c = full_config()
+    return _dc.replace(
+        c, moe=_dc.replace(c.moe, dispatch="batched", capacity_factor=1.0))

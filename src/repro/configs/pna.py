@@ -1,0 +1,32 @@
+"""pna [arXiv:2004.05718]: 4L d=75, aggregators mean/max/min/std,
+scalers identity/amplification/attenuation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import gnn as G
+from .common_gnn import gnn_spec
+
+ARCH_ID = "pna"
+
+
+def make_cfg(info):
+    return G.PNAConfig(name=ARCH_ID, n_layers=4, d_hidden=75,
+                       d_in=info["d_feat"], n_out=1)
+
+
+def smoke():
+    cfg = G.PNAConfig(name=ARCH_ID, n_layers=2, d_hidden=16, d_in=8)
+    params = G.pna_init(jax.random.key(0), cfg)
+    rng = np.random.default_rng(0)
+    g = G.Graph(nodes=jnp.asarray(rng.standard_normal((64, 8)).astype(np.float32)),
+                senders=jnp.asarray(rng.integers(0, 64, 256).astype(np.int32)),
+                receivers=jnp.asarray(rng.integers(0, 64, 256).astype(np.int32)),
+                graph_ids=jnp.asarray((np.arange(64) // 32).astype(np.int32)),
+                n_graphs=2)
+    out = G.pna_apply(params, cfg, g)
+    assert out.shape == (2, 1) and not np.isnan(np.asarray(out)).any()
+    return {"out_shape": tuple(out.shape)}
+
+
+SPEC = gnn_spec(ARCH_ID, make_cfg, G.pna_init, G.pna_apply, "graph_reg", smoke)

@@ -1,0 +1,37 @@
+"""schnet [arXiv:1706.08566]: 3 interactions, d=64, 300 RBF, cutoff 10 Å.
+
+Geometric: nodes are atom types, positions drive the continuous-filter conv.
+Non-molecular shapes get synthetic positions (shape exercise per the
+assignment; modality frontend notes in DESIGN.md)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import gnn as G
+from .common_gnn import gnn_spec
+
+ARCH_ID = "schnet"
+
+
+def make_cfg(info):
+    return G.SchNetConfig(name=ARCH_ID, n_interactions=3, d_hidden=64,
+                          n_rbf=300, cutoff=10.0)
+
+
+def smoke():
+    cfg = G.SchNetConfig(name=ARCH_ID, n_interactions=2, d_hidden=16, n_rbf=20)
+    params = G.schnet_init(jax.random.key(0), cfg)
+    rng = np.random.default_rng(0)
+    g = G.Graph(nodes=jnp.asarray(rng.integers(1, 10, (60, 1)).astype(np.int32)),
+                senders=jnp.asarray(rng.integers(0, 60, 128).astype(np.int32)),
+                receivers=jnp.asarray(rng.integers(0, 60, 128).astype(np.int32)),
+                positions=jnp.asarray(rng.standard_normal((60, 3)).astype(np.float32)),
+                graph_ids=jnp.asarray((np.arange(60) // 30).astype(np.int32)),
+                n_graphs=2)
+    e = G.schnet_apply(params, cfg, g)
+    assert e.shape == (2, 1) and not np.isnan(np.asarray(e)).any()
+    return {"energy_shape": tuple(e.shape)}
+
+
+SPEC = gnn_spec(ARCH_ID, make_cfg, G.schnet_init, G.schnet_apply,
+                "graph_reg", smoke)

@@ -1,0 +1,115 @@
+"""xdeepfm [arXiv:1803.05170]: 39 sparse fields, embed 10, CIN 200-200-200,
+MLP 400-400.
+
+Embedding tables are the hot path (huge-vocab rows sharded over "model" —
+each lookup becomes a partitioned gather, the ETL bridge per DESIGN.md §4).
+Shapes: train 65,536 / online 512 / offline 262,144 / retrieval 1 × 10^6.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..models.recsys import (XDeepFMConfig, bce_loss, retrieval_scores,
+                             xdeepfm_apply, xdeepfm_init)
+from ..train.optimizer import AdamWConfig, adamw_update
+from .common import ArchSpec, Cell, MeshAxes, abstract_adamw, adamw_pspecs
+
+ARCH_ID = "xdeepfm"
+
+SHAPES = {
+    "train_batch": dict(kind="train", batch=65_536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262_144),
+    "retrieval_cand": dict(kind="serve", batch=1, n_cand=1_048_576,
+                           raw="n_candidates=1,000,000 (padded to 2^20)"),
+}
+
+CFG = XDeepFMConfig(name=ARCH_ID, n_sparse=39, embed_dim=10,
+                    cin_layers=(200, 200, 200), mlp_dims=(400, 400))
+
+OPT = AdamWConfig(lr=1e-3, schedule="cosine", total_steps=20_000,
+                  weight_decay=1e-5)
+
+
+def _param_pspecs(mp: MeshAxes, a_params):
+    tp = mp.tp_axis
+
+    def spec(path, leaf):
+        key = "/".join(str(getattr(p, "key", "")) for p in path)
+        if "tables/" in key or "linear/" in key:
+            return P(tp, None)  # shard the huge vocab rows
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec, a_params)
+
+
+def build_cell(shape: str, mp: MeshAxes) -> Optional[Cell]:
+    info = SHAPES[shape]
+    a_params = jax.eval_shape(lambda k: xdeepfm_init(k, CFG), jax.random.key(0))
+    p_specs = _param_pspecs(mp, a_params)
+    B = info["batch"]
+    a_ids = jax.ShapeDtypeStruct((B, CFG.n_sparse), jnp.int32)
+    ids_spec = P(mp.dp, None) if B > 1 else P(None, None)
+
+    if info["kind"] == "train":
+        a_opt = abstract_adamw(a_params)
+        o_specs = adamw_pspecs(p_specs)
+        a_lab = jax.ShapeDtypeStruct((B,), jnp.float32)
+
+        def train_step(params, opt_state, ids, labels):
+            def loss_fn(p):
+                return bce_loss(xdeepfm_apply(p, CFG, ids), labels), {}
+
+            (loss, m), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+            params, opt_state, om = adamw_update(grads, opt_state, params, OPT)
+            return params, opt_state, {"loss": loss, **om}
+
+        return Cell(arch=ARCH_ID, shape=shape, kind="train", step_fn=train_step,
+                    abstract_args=(a_params, a_opt, a_ids, a_lab),
+                    arg_pspecs=(p_specs, o_specs, ids_spec, P(mp.dp)),
+                    donate=(0, 1))
+
+    if shape == "retrieval_cand":
+        a_cand = jax.ShapeDtypeStruct((info["n_cand"], CFG.embed_dim), jnp.float32)
+
+        def serve(params, ids, cand):
+            return retrieval_scores(params, CFG, ids, cand)
+
+        return Cell(arch=ARCH_ID, shape=shape, kind="serve", step_fn=serve,
+                    abstract_args=(a_params, a_ids, a_cand),
+                    arg_pspecs=(p_specs, ids_spec, P(mp.all_axes, None)),
+                    note=info.get("raw", ""))
+
+    def serve(params, ids):
+        return jax.nn.sigmoid(xdeepfm_apply(params, CFG, ids))
+
+    return Cell(arch=ARCH_ID, shape=shape, kind="serve", step_fn=serve,
+                abstract_args=(a_params, a_ids),
+                arg_pspecs=(p_specs, ids_spec))
+
+
+def smoke():
+    cfg = XDeepFMConfig(name=ARCH_ID + "-smoke", n_sparse=6, embed_dim=8,
+                        cin_layers=(16, 16), mlp_dims=(32,),
+                        vocab_sizes=(64,) * 6)
+    params = xdeepfm_init(jax.random.key(0), cfg)
+    rng = np.random.default_rng(0)
+    ids = jnp.asarray(rng.integers(0, 64, (16, 6)).astype(np.int32))
+    labels = jnp.asarray(rng.integers(0, 2, 16).astype(np.float32))
+    logits = xdeepfm_apply(params, cfg, ids)
+    loss = bce_loss(logits, labels)
+    assert logits.shape == (16,) and not np.isnan(float(loss))
+    cand = jnp.asarray(rng.standard_normal((256, 8)).astype(np.float32))
+    scores = retrieval_scores(params, cfg, ids[:1], cand)
+    assert scores.shape == (1, 256)
+    return {"loss": float(loss)}
+
+
+SPEC = ArchSpec(arch=ARCH_ID, family="recsys", shapes=tuple(SHAPES),
+                build_cell=build_cell, smoke=smoke)

@@ -1,0 +1,49 @@
+"""repro.core — the paper's primary contribution as a composable JAX library.
+
+"jaxdf": a static-shape columnar table + the relational ETL ops the paper
+uses to express the Anonymized Network Sensing Graph Challenge (unique,
+value_counts, groupby-aggregate, drop_duplicates), the 14 challenge queries,
+and the IP-anonymization pipeline.  ``ref.py`` is the sequential NumPy oracle
+standing in for single-core Pandas.
+"""
+from .table import Table
+from .ops import (
+    GroupResult,
+    UniqueResult,
+    drop_duplicates,
+    factorize,
+    groupby_aggregate,
+    hash_permutation,
+    mix32,
+    multi_key_sort,
+    random_permutation,
+    segment_ids_from_sorted,
+    unique,
+    value_counts,
+)
+from .queries import QueryResults, run_all_queries, traffic_matrix
+from .anonymize import AnonymizationResult, anonymize
+from .temporal import window_ids, windowed_queries
+
+__all__ = [
+    "Table",
+    "GroupResult",
+    "UniqueResult",
+    "drop_duplicates",
+    "factorize",
+    "groupby_aggregate",
+    "hash_permutation",
+    "mix32",
+    "multi_key_sort",
+    "random_permutation",
+    "segment_ids_from_sorted",
+    "unique",
+    "value_counts",
+    "QueryResults",
+    "run_all_queries",
+    "traffic_matrix",
+    "AnonymizationResult",
+    "anonymize",
+    "window_ids",
+    "windowed_queries",
+]

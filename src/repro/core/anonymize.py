@@ -1,0 +1,81 @@
+"""IP-address anonymization — paper §IV "IP Address Anonymization".
+
+The paper's recipe, verbatim in data-science ops:
+
+  1. ``unique`` over the union of src and dst columns  -> N distinct IPs,
+  2. generate ``iota(N)`` and ``shuffle`` it  -> random permutation,
+  3. ``gather`` new ids for every row.
+
+We provide the stochastic variant (``cupy.random.shuffle`` analogue via
+``jax.random``) and the deterministic HashGraph-style variant the paper cites
+as future work (Green et al. [22, 23]) — both over static-shape buffers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .ops import factorize, hash_permutation, random_permutation
+from .queries import unique_ips
+from .table import Table
+
+__all__ = ["AnonymizationResult", "anonymize"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AnonymizationResult:
+    table: Table           # same schema, src/dst replaced by anonymized ids
+    ip_values: jnp.ndarray  # sorted distinct original IPs (tail-padded)
+    new_ids: jnp.ndarray    # new_ids[rank] = anonymized id of ip_values[rank]
+    n_ips: jnp.ndarray      # scalar int32
+
+
+jax.tree_util.register_pytree_node(
+    AnonymizationResult,
+    lambda a: ((a.table, a.ip_values, a.new_ids, a.n_ips), None),
+    lambda _, ch: AnonymizationResult(*ch),
+)
+
+
+def anonymize(
+    t: Table,
+    key: Optional[jax.Array] = None,
+    *,
+    method: str = "shuffle",
+    rounds: int = 1,
+) -> AnonymizationResult:
+    """Anonymize ``src``/``dst`` of a packet table.
+
+    Args:
+      t: packet table with ``src`` and ``dst`` columns.
+      key: PRNG key (required for ``method='shuffle'``).
+      method: ``'shuffle'`` (paper's cupy.random.shuffle analogue) or
+        ``'hash'`` (deterministic HashGraph-style permutation, Green et al.).
+      rounds: extra shuffle rounds — the paper notes one or two extra
+        iterations further decorrelate the permutation at negligible cost.
+    """
+    ips = unique_ips(t)
+    cap = ips.values.shape[0]
+    n = ips.n_unique
+    if method == "shuffle":
+        if key is None:
+            raise ValueError("method='shuffle' requires a PRNG key")
+        keys = jax.random.split(key, rounds)
+        perm = random_permutation(keys[0], cap, n)
+        for k in keys[1:]:
+            # composing uniform permutations == shuffling again (paper §IV)
+            perm = perm[random_permutation(k, cap, n)]
+    elif method == "hash":
+        perm = hash_permutation(cap, n)
+        for r in range(1, rounds):
+            perm = perm[hash_permutation(cap, n, salt=0x9E3779B9 + r)]
+    else:
+        raise ValueError(f"unknown method {method!r}")
+
+    src_rank = factorize(t["src"], ips.values)
+    dst_rank = factorize(t["dst"], ips.values)
+    anon = t.with_columns(src=perm[src_rank], dst=perm[dst_rank])
+    return AnonymizationResult(table=anon, ip_values=ips.values, new_ids=perm, n_ips=n)

@@ -1,0 +1,344 @@
+"""Relational primitives ("jaxdf" ops) — the paper's ETL vocabulary in JAX.
+
+The paper expresses every Graph Challenge query with four dataframe ops:
+``unique``, ``value_counts``, ``groupby(...).agg``, ``drop_duplicates``.
+cuDF implements these with dynamic hash tables; XLA requires static shapes,
+so the TPU-idiomatic equivalent is **multi-key stable sort + segment
+reduction** (see DESIGN.md §2).  Every op here:
+
+  * takes arrays of static ``capacity`` with the first ``n_valid`` rows live,
+  * returns arrays of static capacity with an ``n_groups``/``n_unique`` scalar
+    and padding at the tail,
+  * is pure jnp/lax, so it jits, vmaps, and shard_maps unchanged.
+
+The invalid tail is handled with a *leading validity sort key*: rows are
+sorted by ``(is_invalid, key0, key1, ...)``, which guarantees the first
+``n_valid`` sorted rows are exactly the live rows regardless of key values
+(including values equal to the dtype max).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = [
+    "multi_key_sort",
+    "segment_ids_from_sorted",
+    "GroupResult",
+    "groupby_aggregate",
+    "UniqueResult",
+    "unique",
+    "value_counts",
+    "drop_duplicates",
+    "factorize",
+    "mix32",
+    "random_permutation",
+    "hash_permutation",
+]
+
+_OVERFLOW = "overflow segment index == capacity; buffers are capacity+1 long"
+
+
+def _validity_key(capacity: int, n_valid: jnp.ndarray) -> jnp.ndarray:
+    """0 for live rows, 1 for padding — used as the leading sort key."""
+    return (jnp.arange(capacity, dtype=jnp.int32) >= n_valid).astype(jnp.int32)
+
+
+def multi_key_sort(
+    keys: Sequence[jnp.ndarray],
+    payloads: Sequence[jnp.ndarray] = (),
+    n_valid: Optional[jnp.ndarray] = None,
+    valid_mask: Optional[jnp.ndarray] = None,
+) -> Tuple[Tuple[jnp.ndarray, ...], Tuple[jnp.ndarray, ...]]:
+    """Stable lexicographic sort by ``keys`` carrying ``payloads`` along.
+
+    Live rows come first (see module docstring).  Validity is either a prefix
+    (``n_valid``) or an arbitrary boolean ``valid_mask`` (e.g. the segmented
+    buffers an ``all_to_all`` exchange produces — dist/relational.py); after
+    sorting, live rows always form the prefix.  Returns (sorted_keys,
+    sorted_payloads); the validity key is stripped from the output.
+    """
+    keys = [jnp.asarray(k) for k in keys]
+    payloads = [jnp.asarray(p) for p in payloads]
+    cap = keys[0].shape[0]
+    if n_valid is None and valid_mask is None:
+        operands = (*keys, *payloads)
+        out = lax.sort(operands, num_keys=len(keys), is_stable=True)
+    else:
+        if valid_mask is not None:
+            vk = (~valid_mask).astype(jnp.int32)
+        else:
+            vk = _validity_key(cap, n_valid)
+        operands = (vk, *keys, *payloads)
+        out = lax.sort(operands, num_keys=1 + len(keys), is_stable=True)[1:]
+    return tuple(out[: len(keys)]), tuple(out[len(keys):])
+
+
+def segment_ids_from_sorted(
+    sorted_keys: Sequence[jnp.ndarray], n_valid: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Group structure of pre-sorted keys.
+
+    Returns ``(seg_ids, first_flags, n_groups)`` where ``seg_ids[i]`` is the
+    group index of row i (== capacity for padding rows — callers must use
+    ``num_segments = capacity + 1`` buffers, see ``_OVERFLOW``), and
+    ``first_flags[i]`` is 1 iff row i is the first row of its group.
+    """
+    cap = sorted_keys[0].shape[0]
+    valid = jnp.arange(cap, dtype=jnp.int32) < n_valid
+    neq = jnp.zeros(cap, dtype=bool)
+    for k in sorted_keys:
+        neq = neq | jnp.concatenate([jnp.ones((1,), bool), k[1:] != k[:-1]])
+    neq = neq.at[0].set(True)
+    first = (neq & valid).astype(jnp.int32)
+    seg = jnp.cumsum(first) - 1
+    seg = jnp.where(valid, seg, cap).astype(jnp.int32)
+    n_groups = jnp.sum(first).astype(jnp.int32)
+    return seg, first, n_groups
+
+
+def _scatter_firsts(
+    col: jnp.ndarray, seg: jnp.ndarray, first: jnp.ndarray, cap: int
+) -> jnp.ndarray:
+    """Scatter first-occurrence values of ``col`` to their group slot.
+
+    Padding slots are filled with the dtype max so that key outputs stay
+    globally sorted ascending (live prefix < padding) — ``factorize`` relies
+    on this for its binary search.
+    """
+    dst = jnp.where(first.astype(bool), seg, cap)
+    buf = jnp.full((cap + 1,), _max_ident(col.dtype), dtype=col.dtype).at[dst].set(col)
+    return buf[:cap]
+
+
+_AGGS = ("sum", "count", "max", "min", "mean")
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupResult:
+    """Result of a group-by: group keys + aggregates, tail-padded."""
+
+    keys: Tuple[jnp.ndarray, ...]
+    aggs: Dict[str, jnp.ndarray]
+    n_groups: jnp.ndarray  # scalar int32
+
+    def mask(self) -> jnp.ndarray:
+        cap = self.keys[0].shape[0]
+        return jnp.arange(cap, dtype=jnp.int32) < self.n_groups
+
+
+jax.tree_util.register_pytree_node(
+    GroupResult,
+    lambda g: ((g.keys, g.aggs, g.n_groups), tuple(sorted(g.aggs))),
+    lambda aux, ch: GroupResult(keys=ch[0], aggs=ch[1], n_groups=ch[2]),
+)
+
+
+def groupby_aggregate(
+    keys: Sequence[jnp.ndarray],
+    values: Optional[Dict[str, Tuple[jnp.ndarray, str]]] = None,
+    n_valid: Optional[jnp.ndarray] = None,
+    count_name: Optional[str] = "count",
+    valid_mask: Optional[jnp.ndarray] = None,
+) -> GroupResult:
+    """``df.groupby(keys).agg(values)`` — sort + segment-reduce.
+
+    Args:
+      keys: group-by key columns (equal static length).
+      values: mapping output name -> (value column, agg) with agg in
+        ``{"sum","count","max","min","mean"}``.
+      n_valid: live-row count (defaults to capacity).
+      count_name: if set, always emit a group-size aggregate under this name.
+      valid_mask: arbitrary boolean live-row mask (overrides ``n_valid``).
+    """
+    keys = [jnp.asarray(k) for k in keys]
+    cap = keys[0].shape[0]
+    if valid_mask is not None:
+        n_valid = jnp.sum(valid_mask).astype(jnp.int32)
+    else:
+        n_valid = jnp.asarray(cap if n_valid is None else n_valid, jnp.int32)
+    values = dict(values or {})
+    for name, (_, agg) in values.items():
+        if agg not in _AGGS:
+            raise ValueError(f"unknown agg {agg!r} for {name!r}")
+
+    payloads = [v for v, _ in values.values()]
+    skeys, spayloads = multi_key_sort(
+        keys, payloads, n_valid=n_valid, valid_mask=valid_mask
+    )
+    seg, first, n_groups = segment_ids_from_sorted(skeys, n_valid)
+    valid = jnp.arange(cap, dtype=jnp.int32) < n_valid
+
+    out_keys = tuple(_scatter_firsts(k, seg, first, cap) for k in skeys)
+    aggs: Dict[str, jnp.ndarray] = {}
+    counts = None
+    if count_name is not None or any(a == "mean" for _, a in values.values()):
+        counts = jax.ops.segment_sum(
+            valid.astype(jnp.int32), seg, num_segments=cap + 1
+        )[:cap]
+    if count_name is not None:
+        aggs[count_name] = counts
+
+    for (name, (_, agg)), col in zip(values.items(), spayloads):
+        if agg in ("sum", "mean"):
+            s = jax.ops.segment_sum(
+                jnp.where(valid, col, jnp.zeros((), col.dtype)),
+                seg,
+                num_segments=cap + 1,
+            )[:cap]
+            if agg == "sum":
+                aggs[name] = s
+            else:
+                aggs[name] = s / jnp.maximum(counts, 1).astype(
+                    s.dtype if jnp.issubdtype(s.dtype, jnp.floating) else jnp.float32
+                )
+        elif agg == "count":
+            aggs[name] = jax.ops.segment_sum(
+                valid.astype(jnp.int32), seg, num_segments=cap + 1
+            )[:cap]
+        elif agg == "max":
+            ident = _min_ident(col.dtype)
+            aggs[name] = jax.ops.segment_max(
+                jnp.where(valid, col, ident), seg, num_segments=cap + 1
+            )[:cap]
+        elif agg == "min":
+            ident = _max_ident(col.dtype)
+            aggs[name] = jax.ops.segment_min(
+                jnp.where(valid, col, ident), seg, num_segments=cap + 1
+            )[:cap]
+    return GroupResult(keys=out_keys, aggs=aggs, n_groups=n_groups)
+
+
+def _min_ident(dtype):
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.asarray(-jnp.inf, dtype)
+    return jnp.asarray(jnp.iinfo(dtype).min, dtype)
+
+
+def _max_ident(dtype):
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.asarray(jnp.inf, dtype)
+    return jnp.asarray(jnp.iinfo(dtype).max, dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class UniqueResult:
+    """Sorted distinct values, their multiplicities, and the live count."""
+
+    values: jnp.ndarray
+    counts: jnp.ndarray
+    weight_sums: Optional[jnp.ndarray]
+    n_unique: jnp.ndarray  # scalar int32
+
+    def mask(self) -> jnp.ndarray:
+        cap = self.values.shape[0]
+        return jnp.arange(cap, dtype=jnp.int32) < self.n_unique
+
+
+jax.tree_util.register_pytree_node(
+    UniqueResult,
+    lambda u: ((u.values, u.counts, u.weight_sums, u.n_unique), None),
+    lambda _, ch: UniqueResult(*ch),
+)
+
+
+def unique(
+    x: jnp.ndarray,
+    n_valid: Optional[jnp.ndarray] = None,
+    weights: Optional[jnp.ndarray] = None,
+    valid_mask: Optional[jnp.ndarray] = None,
+) -> UniqueResult:
+    """``pd.unique`` / ``np.unique(return_counts=True)`` with static shapes."""
+    values = {"w": (weights, "sum")} if weights is not None else None
+    g = groupby_aggregate(
+        [x], values, n_valid=n_valid, count_name="count", valid_mask=valid_mask
+    )
+    return UniqueResult(
+        values=g.keys[0],
+        counts=g.aggs["count"],
+        weight_sums=g.aggs.get("w"),
+        n_unique=g.n_groups,
+    )
+
+
+def value_counts(
+    x: jnp.ndarray, n_valid: Optional[jnp.ndarray] = None
+) -> UniqueResult:
+    """``df[col].value_counts()`` (unsorted-by-count; use counts + mask)."""
+    return unique(x, n_valid=n_valid)
+
+
+def drop_duplicates(
+    keys: Sequence[jnp.ndarray], n_valid: Optional[jnp.ndarray] = None
+) -> GroupResult:
+    """``df[cols].drop_duplicates()`` — distinct key rows."""
+    return groupby_aggregate(keys, None, n_valid=n_valid, count_name="count")
+
+
+def factorize(
+    x: jnp.ndarray,
+    sorted_uniques: jnp.ndarray,
+) -> jnp.ndarray:
+    """Map each element of ``x`` to its rank in ``sorted_uniques``.
+
+    ``sorted_uniques`` is the (tail-padded, ascending) output of ``unique``;
+    padding slots hold values >= every live value only if the live max is the
+    dtype max, in which case ``side='left'`` still lands on the first (live)
+    occurrence — see tests/test_core_ops.py::test_factorize_dtype_max.
+    """
+    return jnp.searchsorted(sorted_uniques, x, side="left").astype(jnp.int32)
+
+
+# -----------------------------------------------------------------------------
+# Permutations (anonymization substrate)
+# -----------------------------------------------------------------------------
+
+def mix32(x: jnp.ndarray) -> jnp.ndarray:
+    """Murmur3-style finalizer — a bijection on uint32 (int32-safe wrapper)."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def random_permutation(key: jax.Array, capacity: int, n_valid) -> jnp.ndarray:
+    """Uniform random permutation of ``[0, n_valid)`` in a static buffer.
+
+    The paper uses ``cupy.random.shuffle`` on an iota; the JAX equivalent with
+    a *traced* ``n_valid`` is: draw random sort keys, push the invalid tail to
+    the end with the validity key, and scatter ranks.  ``out[i]`` (i < n_valid)
+    is the anonymized id of rank i, uniform over [0, n_valid); tail entries map
+    into [n_valid, capacity) and must be ignored.
+    """
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    r = jax.random.bits(key, (capacity,), dtype=jnp.uint32)
+    (_,), (ranks,) = multi_key_sort([r], [jnp.arange(capacity, dtype=jnp.int32)], n_valid=n_valid)
+    # ranks[j] = original rank that lands in slot j  (j < n_valid is random)
+    out = jnp.zeros((capacity,), jnp.int32).at[ranks].set(
+        jnp.arange(capacity, dtype=jnp.int32)
+    )
+    return out
+
+
+def hash_permutation(capacity: int, n_valid, salt: int = 0x9E3779B9) -> jnp.ndarray:
+    """Deterministic HashGraph-style permutation (Green et al. [22,23]).
+
+    Sorting ranks by a bijective integer mix is the TPU analogue of deriving a
+    permutation from hash-table insertion order: deterministic (supports the
+    paper's 'deterministic testing' point), no RNG state, one sort.
+    """
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    r = mix32(jnp.arange(capacity, dtype=jnp.uint32) + jnp.uint32(salt))
+    (_,), (ranks,) = multi_key_sort([r], [jnp.arange(capacity, dtype=jnp.int32)], n_valid=n_valid)
+    out = jnp.zeros((capacity,), jnp.int32).at[ranks].set(
+        jnp.arange(capacity, dtype=jnp.int32)
+    )
+    return out

@@ -1,0 +1,93 @@
+"""NumPy oracle for the challenge queries — the "single-core Pandas" role.
+
+The paper benchmarks cuDF (GPU) against the identical code running on
+single-core Pandas.  Pandas is not available in this environment, so this
+module is the CPU reference: a straightforward, sequential NumPy
+implementation of every Table III query with *dynamic* shapes.  It is the
+ground truth for all correctness tests and the denominator of the Fig. 1
+speedup benchmark.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+__all__ = [
+    "ref_traffic_matrix",
+    "ref_run_all_queries",
+    "ref_anonymize_check",
+]
+
+
+def _weights(src: np.ndarray, n_packets: Optional[np.ndarray]) -> np.ndarray:
+    return np.ones(len(src), np.int64) if n_packets is None else np.asarray(n_packets, np.int64)
+
+
+def ref_traffic_matrix(src, dst, n_packets=None):
+    """A_t as (src, dst, packets) arrays, lexicographically sorted."""
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    w = _weights(src, n_packets)
+    order = np.lexsort((dst, src))
+    s, d, w = src[order], dst[order], w[order]
+    first = np.ones(len(s), bool)
+    first[1:] = (s[1:] != s[:-1]) | (d[1:] != d[:-1])
+    seg = np.cumsum(first) - 1
+    packets = np.zeros(int(seg[-1]) + 1 if len(seg) else 0, np.int64)
+    np.add.at(packets, seg, w)
+    return s[first], d[first], packets
+
+
+def ref_run_all_queries(src, dst, n_packets=None) -> Dict[str, int]:
+    """All scalar challenge statistics (paper Table III), dynamically shaped."""
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    w = _weights(src, n_packets)
+    ls, ld, lp = ref_traffic_matrix(src, dst, n_packets)
+
+    def _maxcount(x) -> int:
+        if len(x) == 0:
+            return 0
+        return int(np.unique(x, return_counts=True)[1].max())
+
+    def _max_groupsum(keys, vals) -> int:
+        if len(keys) == 0:
+            return 0
+        _, inv = np.unique(keys, return_inverse=True)
+        sums = np.zeros(inv.max() + 1, np.int64)
+        np.add.at(sums, inv, vals)
+        return int(sums.max())
+
+    return {
+        "valid_packets": int(w.sum()),
+        "unique_links": int(len(ls)),
+        "max_link_packets": int(lp.max()) if len(lp) else 0,
+        "n_unique_sources": int(len(np.unique(src))),
+        "n_unique_destinations": int(len(np.unique(dst))),
+        "n_unique_ips": int(len(np.unique(np.concatenate([src, dst])))),
+        "max_source_packets": _max_groupsum(src, w),
+        "max_source_fanout": _maxcount(ls),
+        "max_destination_packets": _max_groupsum(dst, w),
+        "max_destination_fanin": _maxcount(ld),
+    }
+
+
+def ref_anonymize_check(orig_src, orig_dst, anon_src, anon_dst) -> bool:
+    """Anonymization invariant: the mapping IP -> id is a graph isomorphism.
+
+    Checks (a) the map old->new is a well-defined bijection onto
+    [0, n_unique_ips) and (b) the multiset of edges is preserved under it.
+    """
+    orig = np.concatenate([orig_src, orig_dst])
+    anon = np.concatenate([anon_src, anon_dst])
+    mapping: Dict[int, int] = {}
+    for o, a in zip(orig.tolist(), anon.tolist()):
+        if mapping.setdefault(o, a) != a:
+            return False  # not a function
+    vals = sorted(mapping.values())
+    n = len(np.unique(orig))
+    if vals != list(range(n)):
+        return False  # not a bijection onto [0, n)
+    remapped = [(mapping[s], mapping[d]) for s, d in zip(orig_src.tolist(), orig_dst.tolist())]
+    return sorted(remapped) == sorted(zip(anon_src.tolist(), anon_dst.tolist()))

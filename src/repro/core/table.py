@@ -1,0 +1,108 @@
+"""Columnar Table abstraction ("jaxdf").
+
+The paper's central move is representing the network-sensing graph as a
+columnar table ``(src, dst, n_packets)`` and expressing every challenge query
+as dataframe ETL ops.  JAX has no dataframe engine, so this module provides
+the minimal columnar substrate: a ``Table`` is an ordered dict of equal-length
+1-D jnp arrays plus an optional validity count (static-shape discipline — a
+table always carries ``capacity`` rows, of which the first ``n_valid`` are
+live).  All relational ops live in :mod:`repro.core.ops` and are pure
+functions over Tables/arrays so they jit/shard_map cleanly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Mapping, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Table"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Table:
+    """An immutable columnar table of equal-length 1-D arrays.
+
+    Attributes:
+      columns: mapping column name -> jnp.ndarray of shape (capacity,).
+      n_valid: scalar int32 — number of live rows (<= capacity). Rows at
+        index >= n_valid are padding and must be ignored by every consumer.
+        ``None`` means "all rows valid" and is normalised to capacity.
+    """
+
+    columns: Dict[str, jnp.ndarray]
+    n_valid: Optional[jnp.ndarray] = None
+
+    # -- construction -------------------------------------------------------
+    def __post_init__(self):
+        lens = {k: v.shape[0] for k, v in self.columns.items()}
+        if len(set(lens.values())) > 1:
+            raise ValueError(f"ragged columns: {lens}")
+        if self.n_valid is None:
+            cap = next(iter(lens.values())) if lens else 0
+            object.__setattr__(self, "n_valid", jnp.asarray(cap, jnp.int32))
+
+    @classmethod
+    def from_dict(cls, data: Mapping[str, jnp.ndarray], n_valid=None) -> "Table":
+        cols = {k: jnp.asarray(v) for k, v in data.items()}
+        return cls(columns=dict(cols), n_valid=None if n_valid is None else jnp.asarray(n_valid, jnp.int32))
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        names = tuple(sorted(self.columns))
+        children = tuple(self.columns[k] for k in names) + (self.n_valid,)
+        return children, names
+
+    @classmethod
+    def tree_unflatten(cls, names, children):
+        *cols, n_valid = children
+        return cls(columns=dict(zip(names, cols)), n_valid=n_valid)
+
+    # -- basic accessors ----------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return next(iter(self.columns.values())).shape[0] if self.columns else 0
+
+    @property
+    def names(self) -> Sequence[str]:
+        return tuple(self.columns)
+
+    def __getitem__(self, name: str) -> jnp.ndarray:
+        return self.columns[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.columns
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self.columns)
+
+    def valid_mask(self) -> jnp.ndarray:
+        """Boolean mask of live rows, shape (capacity,)."""
+        return jnp.arange(self.capacity, dtype=jnp.int32) < self.n_valid
+
+    # -- functional updates --------------------------------------------------
+    def with_columns(self, **cols: jnp.ndarray) -> "Table":
+        new = dict(self.columns)
+        new.update({k: jnp.asarray(v) for k, v in cols.items()})
+        return Table(columns=new, n_valid=self.n_valid)
+
+    def select(self, names: Sequence[str]) -> "Table":
+        return Table(columns={k: self.columns[k] for k in names}, n_valid=self.n_valid)
+
+    def take(self, idx: jnp.ndarray, n_valid=None) -> "Table":
+        """Gather rows by index (static output size = len(idx))."""
+        nv = self.n_valid if n_valid is None else jnp.asarray(n_valid, jnp.int32)
+        return Table(columns={k: v[idx] for k, v in self.columns.items()}, n_valid=nv)
+
+    # -- host conveniences (tests / debugging only) --------------------------
+    def to_numpy(self) -> Dict[str, "jnp.ndarray"]:
+        import numpy as np
+
+        n = int(self.n_valid)
+        return {k: np.asarray(v)[:n] for k, v in self.columns.items()}
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        cols = ", ".join(f"{k}:{v.dtype}[{v.shape[0]}]" for k, v in self.columns.items())
+        return f"Table({cols}, n_valid={self.n_valid})"

@@ -1,0 +1,1 @@
+"""Data substrate: synthetic traffic, columnar IO, samplers, pipelines."""

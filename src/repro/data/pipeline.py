@@ -1,0 +1,120 @@
+"""Host-side streaming data pipeline with background prefetch.
+
+Design contract (fault tolerance, DESIGN.md §5):
+  * every batch is a pure function of ``(seed, step, shard_id)`` — a
+    restarted or relocated worker regenerates identical data with no
+    coordination (the straggler/elastic story depends on this);
+  * the prefetch thread keeps ``depth`` batches ahead so host generation
+    overlaps device compute (the classic input-pipeline overlap);
+  * sources: synthetic LM token streams, recsys click streams, plq row-group
+    streams (data/plq.py), GraphSAGE sampled subgraphs (data/sampler.py).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Dict, Iterator, Optional
+
+import numpy as np
+
+__all__ = ["Prefetcher", "lm_batches", "recsys_batches", "packet_table_batches"]
+
+
+class Prefetcher:
+    """Wrap a batch-producing iterator with a depth-N background thread."""
+
+    def __init__(self, it: Iterator, depth: int = 2):
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._err: Optional[BaseException] = None
+        self._done = object()
+
+        def run():
+            try:
+                for item in it:
+                    self._q.put(item)
+            except BaseException as e:  # surfaced on next()
+                self._err = e
+            finally:
+                self._q.put(self._done)
+
+        self._t = threading.Thread(target=run, daemon=True)
+        self._t.start()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._done:
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item
+
+
+def lm_batches(
+    batch: int,
+    seq_len: int,
+    vocab: int,
+    seed: int = 0,
+    shard_id: int = 0,
+    n_shards: int = 1,
+    start_step: int = 0,
+) -> Iterator[Dict[str, np.ndarray]]:
+    """Deterministic synthetic LM stream: batch(step, shard) is reproducible.
+
+    Tokens follow a Zipfian marginal (realistic softmax pressure) with a
+    shifted-copy structure so the LM objective has learnable signal.
+    """
+    step = start_step
+    while True:
+        rng = np.random.default_rng((seed, step, shard_id))
+        z = rng.zipf(1.3, size=(batch, seq_len + 1))
+        toks = (z % vocab).astype(np.int32)
+        # plant learnable structure: every other token repeats its predecessor
+        toks[:, 2::2] = toks[:, 1:-1:2]
+        yield {"tokens": toks[:, :-1], "labels": toks[:, 1:],
+               "step": np.int64(step), "shard": np.int64(shard_id)}
+        step += 1
+
+
+def recsys_batches(
+    batch: int,
+    n_sparse: int,
+    vocab_sizes,
+    seed: int = 0,
+    shard_id: int = 0,
+    start_step: int = 0,
+) -> Iterator[Dict[str, np.ndarray]]:
+    """Synthetic CTR stream with a planted logistic teacher (learnable)."""
+    vocab_sizes = np.asarray(vocab_sizes, np.int64)
+    teacher_rng = np.random.default_rng(seed + 7919)
+    field_w = teacher_rng.standard_normal(n_sparse).astype(np.float32)
+    step = start_step
+    while True:
+        rng = np.random.default_rng((seed, step, shard_id))
+        ids = (rng.zipf(1.2, size=(batch, n_sparse)) % vocab_sizes[None, :]).astype(np.int32)
+        score = ((ids % 97) / 97.0 - 0.5) @ field_w
+        labels = (rng.random(batch) < 1 / (1 + np.exp(-score))).astype(np.float32)
+        yield {"sparse_ids": ids, "labels": labels, "step": np.int64(step)}
+        step += 1
+
+
+def packet_table_batches(
+    plq_path: str,
+    columns=("src", "dst"),
+    pad_to: Optional[int] = None,
+) -> Iterator[Dict[str, np.ndarray]]:
+    """Stream plq row groups as padded jaxdf-ready column dicts."""
+    from .plq import read_plq_chunks
+
+    for chunk in read_plq_chunks(plq_path, columns):
+        n = len(next(iter(chunk.values())))
+        cap = pad_to or n
+        out = {}
+        for k, v in chunk.items():
+            buf = np.zeros(cap, v.dtype)
+            buf[:n] = v[:cap]
+            out[k] = buf
+        out["n_valid"] = np.int32(min(n, cap))
+        yield out

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical compute layers (+ jnp oracles).
+
+histogram        — value_counts / weighted-degree hot path (one-hot matmul)
+segment_matmul   — GNN message aggregation (one-hot matmul segment reduce)
+flash_attention  — fused GQA/causal/sliding-window attention for the LM archs
+ops              — jit'd dispatching wrappers (xla | pallas | interpret)
+ref              — pure-jnp oracles, sweep-tested against every kernel
+"""
+from .ops import attention, histogram, segment_reduce
+
+__all__ = ["attention", "histogram", "segment_reduce"]

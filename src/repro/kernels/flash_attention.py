@@ -1,0 +1,170 @@
+"""Pallas TPU FlashAttention-2 style fused attention (GQA + causal + SWA).
+
+Used by the assigned LM architectures (qwen2/minicpm/granite: GQA causal;
+mixtral/arctic: GQA + sliding window).  FA on TPU re-thinks the CUDA
+algorithm for the MXU/VMEM hierarchy: the (Bq, Bk) score tile and the (Bq, D)
+accumulator live in VMEM scratch across the innermost kv-block grid dimension
+(the Pallas revisiting idiom), with online-softmax rescaling in fp32.
+
+Grid: ``(B, Hq, Lq/Bq, Lkv/Bk)`` — kv innermost.  GQA is free: the k/v
+BlockSpec index_map sends query head ``h`` to kv head ``h // group``, so kv
+tiles are fetched once per group from HBM's point of view (XLA pipelining).
+
+Backward: ``flash_attention`` is wrapped in ``jax.custom_vjp``; the bwd pass
+is the exact jnp attention VJP (recompute from saved q,k,v).  A fused Pallas
+bwd kernel is a known follow-up (EXPERIMENTS.md §Perf); fwd is the inference
+hot path the paper's serving shapes stress.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import ref_attention
+
+__all__ = ["flash_attention_pallas", "flash_attention"]
+
+_NEG_INF = -1e30
+
+
+def _fa_kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, scale: float, causal: bool, window: Optional[int],
+    block_q: int, block_k: int, lq: int, lkv: int,
+):
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (Bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)  # (Bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)  # (Bk, D)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (Bq, Bk)
+
+    iq = pl.program_id(2)
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    q_pos = q_pos + (lkv - lq)  # align sequence ends (decode: lq < lkv)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = k_pos < lkv  # kv padding
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_ref[...]  # (Bq, 128) replicated
+    m_cur = jnp.max(s, axis=1, keepdims=True)  # (Bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.broadcast_to(m_cur, m_prev.shape))
+    alpha = jnp.exp(m_prev[:, :1] - m_new[:, :1])  # (Bq, 1)
+    p = jnp.exp(s - m_new[:, :1])  # (Bq, Bk)
+    l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = l_ref[:, :1]
+        o_ref[0, 0] = (acc_ref[...] / jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused attention forward. q: (B,Hq,Lq,D); k,v: (B,Hkv,Lkv,D)."""
+    b, hq, lq, d = q.shape
+    hkv, lkv = k.shape[1], k.shape[2]
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+
+    block_q = min(block_q, max(lq, 1))
+    q_pad = -lq % block_q
+    k_pad = -lkv % block_k
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, q_pad), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, k_pad), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, k_pad), (0, 0)))
+    lq_p, lkv_p = lq + q_pad, lkv + k_pad
+
+    grid = (b, hq, lq_p // block_q, lkv_p // block_k)
+    out = pl.pallas_call(
+        functools.partial(
+            _fa_kernel, scale=scale, causal=causal, window=window,
+            block_q=block_q, block_k=block_k, lq=lq, lkv=lkv,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h, i, j, g=group: (b_, h // g, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h, i, j, g=group: (b_, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda b_, h, i, j: (b_, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, lq_p, d), q.dtype),
+        scratch_shapes=[
+            _vmem((block_q, d)),
+            _vmem((block_q, 128)),
+            _vmem((block_q, 128)),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :lq, :]
+
+
+def _vmem(shape):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, jnp.float32)
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6)
+)
+def flash_attention(q, k, v, causal=True, window=None, scale=None, interpret=False):
+    """Differentiable fused attention (Pallas fwd, exact jnp VJP bwd)."""
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, scale=scale, interpret=interpret
+    )
+
+
+def _fa_fwd(q, k, v, causal, window, scale, interpret):
+    out = flash_attention_pallas(
+        q, k, v, causal=causal, window=window, scale=scale, interpret=interpret
+    )
+    return out, (q, k, v)
+
+
+def _fa_bwd(causal, window, scale, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: ref_attention(
+            q_, k_, v_, causal=causal, window=window, scale=scale
+        ),
+        q, k, v,
+    )
+    return vjp(g)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)

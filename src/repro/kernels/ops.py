@@ -1,0 +1,88 @@
+"""jit'd public wrappers around the Pallas kernels, with regime dispatch.
+
+Callers (core queries, GNN aggregation, attention layers) use these entry
+points; each dispatches between the Pallas kernel (TPU, or interpret=True for
+CPU validation) and the XLA fallback (= the oracle) based on problem regime
+and the ``backend`` argument:
+
+  * ``"xla"``       — pure-jnp path (paper-faithful "commodity ops only");
+                      also what the multi-pod dry-run lowers (CPU container).
+  * ``"pallas"``    — Pallas TPU kernel.
+  * ``"interpret"`` — Pallas kernel body interpreted on CPU (tests).
+  * ``"auto"``      — size heuristic: matmul-formulation kernels win when the
+                      segment/bin count is small enough that onehot FLOPs
+                      (2·n·S·d) stay under the scatter path's memory time.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention, flash_attention_pallas
+from .histogram import histogram_pallas
+from .segment_matmul import segment_matmul_pallas
+
+__all__ = ["histogram", "segment_reduce", "attention"]
+
+# One-hot matmul beats scatter only while S is modest; see DESIGN.md §2 and
+# the §Perf napkin math (2·n·S flops vs ~12·n bytes of scatter traffic).
+_MATMUL_SEGMENT_LIMIT = 4096
+
+
+def histogram(
+    ids: jnp.ndarray,
+    num_bins: int,
+    weights: Optional[jnp.ndarray] = None,
+    *,
+    backend: str = "auto",
+) -> jnp.ndarray:
+    if backend == "auto":
+        backend = "pallas" if (
+            jax.default_backend() == "tpu" and num_bins <= _MATMUL_SEGMENT_LIMIT
+        ) else "xla"
+    if backend == "xla":
+        return ref.ref_histogram(ids, num_bins, weights)
+    return histogram_pallas(
+        ids, num_bins, weights, interpret=(backend == "interpret")
+    )
+
+
+def segment_reduce(
+    x: jnp.ndarray,
+    seg_ids: jnp.ndarray,
+    num_segments: int,
+    *,
+    backend: str = "auto",
+) -> jnp.ndarray:
+    if backend == "auto":
+        backend = "pallas" if (
+            jax.default_backend() == "tpu" and num_segments <= _MATMUL_SEGMENT_LIMIT
+        ) else "xla"
+    if backend == "xla":
+        return ref.ref_segment_matmul(x, seg_ids, num_segments)
+    return segment_matmul_pallas(
+        x, seg_ids, num_segments, interpret=(backend == "interpret")
+    )
+
+
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    backend: str = "auto",
+) -> jnp.ndarray:
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if backend == "xla":
+        return ref.ref_attention(q, k, v, causal=causal, window=window, scale=scale)
+    return flash_attention(
+        q, k, v, causal, window, scale, backend == "interpret"
+    )

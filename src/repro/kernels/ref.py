@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``ref_*`` function is the semantic ground truth the kernels are sweep-
+tested against (tests/test_kernels.py, interpret=True on CPU).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ref_histogram", "ref_segment_matmul", "ref_attention"]
+
+
+def ref_histogram(
+    ids: jnp.ndarray,
+    num_bins: int,
+    weights: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Weighted histogram: out[b] = sum_{i: ids[i]==b} weights[i].
+
+    Out-of-range ids (e.g. the jaxdf padding id == capacity) are dropped.
+    """
+    if weights is None:
+        weights = jnp.ones(ids.shape, jnp.float32)
+    ok = (ids >= 0) & (ids < num_bins)
+    return jax.ops.segment_sum(
+        jnp.where(ok, weights, 0).astype(jnp.float32),
+        jnp.where(ok, ids, num_bins),
+        num_segments=num_bins + 1,
+    )[:num_bins]
+
+
+def ref_segment_matmul(
+    x: jnp.ndarray, seg_ids: jnp.ndarray, num_segments: int
+) -> jnp.ndarray:
+    """Feature aggregation: out[s, :] = sum_{i: seg[i]==s} x[i, :]."""
+    ok = (seg_ids >= 0) & (seg_ids < num_segments)
+    return jax.ops.segment_sum(
+        jnp.where(ok[:, None], x, 0),
+        jnp.where(ok, seg_ids, num_segments),
+        num_segments=num_segments + 1,
+    )[:num_segments]
+
+
+def ref_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Reference (G)QA attention.
+
+    Shapes: q (B, Hq, Lq, D); k, v (B, Hkv, Lkv, D) with Hq % Hkv == 0.
+    ``window``: sliding-window size (Mistral SWA) — query t attends to keys in
+    (t - window, t].  Causal offsets assume Lq == Lkv or Lq == 1 (decode).
+    """
+    b, hq, lq, d = q.shape
+    hkv, lkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(lq)[:, None] + (lkv - lq)  # align ends (decode: lq=1)
+    k_pos = jnp.arange(lkv)[None, :]
+    mask = jnp.ones((lq, lkv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    out = jax.nn.softmax(logits, axis=-1) @ vv.astype(jnp.float32)
+    return out.astype(q.dtype)

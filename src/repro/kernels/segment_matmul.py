@@ -1,0 +1,76 @@
+"""Pallas TPU segment-reduce-as-matmul kernel — GNN aggregation hot path.
+
+Message passing (``jax.ops.segment_sum`` over an edge index) is a scatter-add
+— memory-bound and serialization-prone on TPU.  For the batched-small-graph
+and full-batch-small regimes (molecule: 128×30 nodes; cora: 2708 nodes) the
+TPU-native alternative is a dense one-hot contraction on the MXU:
+
+    out[St, Dt] += onehot(seg)[Bn, St].T @ x[Bn, Dt]
+
+Grid: ``(num_seg_tiles, num_feat_tiles, num_row_blocks)`` with rows innermost
+so the output tile stays VMEM-resident and accumulates across row blocks.
+FLOPs are ``2·n·S·d / (tiling)`` — wasteful for huge S (use the XLA scatter
+path, see ops.py dispatch) but roofline-friendly when S ≲ 4k.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["segment_matmul_pallas"]
+
+
+def _seg_mm_kernel(seg_ref, x_ref, out_ref, *, block_segs: int):
+    i = pl.program_id(0)  # segment tile (outer)
+    k = pl.program_id(2)  # row block (inner, accumulating)
+    seg = seg_ref[...]  # (1, Bn)
+    x = x_ref[...].astype(jnp.float32)  # (Bn, Dt)
+    base = i * block_segs
+    segs = base + jax.lax.broadcasted_iota(jnp.int32, (1, block_segs), 1)
+    onehot = (seg.T == segs).astype(jnp.float32)  # (Bn, St)
+    partial = jax.lax.dot_general(
+        onehot, x, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (St, Dt)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += partial
+
+
+def segment_matmul_pallas(
+    x: jnp.ndarray,
+    seg_ids: jnp.ndarray,
+    num_segments: int,
+    *,
+    block_rows: int = 512,
+    block_segs: int = 256,
+    block_feats: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """out[s, :] = sum_{i: seg_ids[i]==s} x[i, :]; out-of-range ids dropped."""
+    n, d = x.shape
+    n_pad = -n % block_rows
+    s_pad = -num_segments % block_segs
+    d_pad = -d % block_feats
+    x_p = jnp.pad(x.astype(jnp.float32), ((0, n_pad), (0, d_pad)))
+    seg_p = jnp.pad(seg_ids.astype(jnp.int32), (0, n_pad), constant_values=-1)[None, :]
+    S, D = num_segments + s_pad, d + d_pad
+
+    grid = (S // block_segs, D // block_feats, x_p.shape[0] // block_rows)
+    out = pl.pallas_call(
+        functools.partial(_seg_mm_kernel, block_segs=block_segs),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_rows), lambda i, j, k: (0, k)),
+            pl.BlockSpec((block_rows, block_feats), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_segs, block_feats), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((S, D), jnp.float32),
+        interpret=interpret,
+    )(seg_p, x_p)
+    return out[:num_segments, :d]

@@ -1,0 +1,170 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+  2. builds the cell (step_fn + ShapeDtypeStruct inputs + PartitionSpecs),
+  3. ``jax.jit(...).lower(...).compile()`` — proving the distribution config
+     is coherent (sharding propagation, collectives, memory) without TPUs,
+  4. records ``memory_analysis()`` / ``cost_analysis()`` and the collective
+     schedule (bytes by op type, parsed from the post-SPMD HLO) to JSON for
+     EXPERIMENTS.md §Dry-run / §Roofline.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --mesh both --out artifacts/dryrun
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+def run_cell(arch: str, shape: str, mesh_kind: str,
+             xla_text: bool = False, hlo_path: Optional[str] = None) -> dict:
+    from ..configs import get_spec
+
+    spec = get_spec(arch)
+    return run_spec_cell(spec, arch, shape, mesh_kind,
+                         xla_text=xla_text, hlo_path=hlo_path)
+
+
+def run_spec_cell(spec, arch: str, shape: str, mesh_kind: str,
+                  xla_text: bool = False, hlo_path: Optional[str] = None) -> dict:
+    """Compile one cell of an (ad-hoc) ArchSpec — used by dryrun and by the
+    perf-iteration driver (launch/perf.py) for hillclimb variants."""
+    from ..configs import MULTI_POD, SINGLE_POD
+    from .mesh import make_production_mesh
+    import dataclasses
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    mp = dataclasses.replace(
+        MULTI_POD if mesh_kind == "multi" else SINGLE_POD, mesh=mesh
+    )
+    cell = spec.build_cell(shape, mp)
+    if cell is None:
+        return {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                "status": "skipped",
+                "reason": "inapplicable (see DESIGN.md §Arch-applicability)"}
+
+    shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), cell.arg_pspecs,
+        is_leaf=lambda x: isinstance(x, PartitionSpec),
+    )
+    jitted = jax.jit(cell.step_fn, in_shardings=shardings,
+                     donate_argnums=cell.donate)
+    with jax.set_mesh(mesh):
+        lowered = jitted.lower(*cell.abstract_args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    mem = {
+        k: int(getattr(ma, k))
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes")
+        if hasattr(ma, k)
+    }
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    cost = {k: float(v) for k, v in (ca or {}).items()
+            if isinstance(v, (int, float)) and (
+                k in ("flops", "transcendentals") or k.startswith("bytes accessed"))}
+
+    hlo = compiled.as_text()
+    from .hloanalysis import analyze_hlo
+
+    deep = analyze_hlo(hlo)  # loop-trip-exact collectives + dot flops
+    if hlo_path:
+        import gzip
+
+        with gzip.open(hlo_path, "wt") as f:
+            f.write(hlo)
+    result = {
+        "arch": arch, "shape": shape, "mesh": mesh_kind, "kind": cell.kind,
+        "status": "ok",
+        "n_devices": mesh.devices.size,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": mem,
+        "cost_analysis": cost,
+        "collectives": deep["collectives"],
+        "collective_bytes_total": deep["collective_bytes_total"],
+        "dot_flops": deep["dot_flops"],
+        "hbm_bytes": deep["hbm_bytes"],
+        "n_while_loops": deep["n_while_loops"],
+        "hlo_size_chars": len(hlo),
+        "note": cell.note,
+    }
+    if xla_text:
+        result["hlo_head"] = hlo[:20000]
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true", help="run every known cell")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    from ..configs import ALL_ARCHS, get_spec
+
+    archs = ALL_ARCHS if (args.all or args.arch is None) else [args.arch]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = 0
+    for arch in archs:
+        spec = get_spec(arch)
+        shapes = [args.shape] if args.shape else list(spec.shapes)
+        for shape in shapes:
+            for mesh_kind in meshes:
+                tag = f"{arch}__{shape}__{mesh_kind}"
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[dryrun] {tag}: cached", flush=True)
+                    continue
+                print(f"[dryrun] {tag}: lowering...", flush=True)
+                try:
+                    res = run_cell(
+                        arch, shape, mesh_kind,
+                        hlo_path=os.path.join(args.out, tag + ".hlo.gz"))
+                except Exception as e:  # record, keep sweeping
+                    res = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                           "status": "error", "error": repr(e),
+                           "traceback": traceback.format_exc()[-4000:]}
+                    failures += 1
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                status = res["status"]
+                extra = ""
+                if status == "ok":
+                    mem = res["memory_analysis"]
+                    extra = (f" args={mem.get('argument_size_in_bytes', 0)/2**30:.2f}GiB"
+                             f" temp={mem.get('temp_size_in_bytes', 0)/2**30:.2f}GiB"
+                             f" flops={res['cost_analysis'].get('flops', 0):.3g}"
+                             f" coll={res['collective_bytes_total']/2**20:.1f}MiB"
+                             f" compile={res['compile_s']:.0f}s")
+                elif status == "error":
+                    extra = " " + res["error"][:200]
+                print(f"[dryrun] {tag}: {status}{extra}", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,239 @@
+"""Exact post-SPMD HLO accounting for the roofline analysis.
+
+``compiled.cost_analysis()`` visits a ``while`` body ONCE — a scan-over-80-
+layers program under-reports FLOPs/bytes/collectives by ~80×.  This module
+re-derives the numbers from the HLO text with loop trip counts applied:
+
+  1. split the module into computations,
+  2. build the while-op call graph (body/condition edges) and extract each
+     loop's trip count (max s32 constant in its condition — exact for
+     lax.scan/lax.map/fori_loop lowerings, which compare an iota counter
+     against the static length),
+  3. propagate execution multipliers from ENTRY through nested loops,
+  4. sum (a) collective payload bytes and (b) dot FLOPs per computation,
+     weighted by multiplier.
+
+Used by launch/dryrun.py at compile time; also re-runnable offline on the
+gzip'd HLO the dry-run stores next to each cell's JSON.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["analyze_hlo"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_SHAPE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_WHILE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONST_S32 = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_COLL = re.compile(
+    r"=\s+(\([^=]*?\)|[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_DOT = re.compile(r"=\s+([a-z][a-z0-9]*\[[0-9,]*\])[^=]*\bdot\(")
+_DOT_LHS_REF = re.compile(r"\bdot\(\s*%?([\w.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_DEF = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*([a-z][a-z0-9]*\[[0-9,]*\])")
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE.findall(type_str):
+        if dtype in _DTYPE_BYTES:
+            total += _shape_elems(dims) * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    current: Optional[str] = None
+    entry_name = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        m = _COMP_HDR.match(line) if not line.startswith(" ") else None
+        if m:
+            current = m.group(1)
+            comps[current] = []
+            if line.startswith("ENTRY"):
+                entry_name = current
+            continue
+        if current is not None and stripped == "}":
+            current = None
+            continue
+        if current is not None:
+            comps[current].append(stripped)
+    if entry_name:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def analyze_hlo(hlo: str) -> dict:
+    comps = _split_computations(hlo)
+
+    # while edges: parent comp -> [(cond, body, trip)]
+    edges: Dict[str, List[Tuple[str, str, int]]] = {}
+    for name, lines in comps.items():
+        if name == "__entry__":
+            continue
+        for ln in lines:
+            m = _WHILE.search(ln)
+            if not m:
+                continue
+            cond, body = m.group(1), m.group(2)
+            tm = _TRIP.search(ln)  # XLA's own analysis, exact for scan/map
+            if tm:
+                trip = int(tm.group(1))
+            else:  # fall back to the max s32 constant in the condition
+                consts = [int(c) for c in _CONST_S32.findall(
+                    "\n".join(comps.get(cond, [])))]
+                trip = max(consts) if consts else 1
+            edges.setdefault(name, []).append((cond, body, trip))
+
+    # propagate multipliers from the entry computation through nested loops
+    entry = next((n for n in comps if comps.get("__entry__") is comps[n]
+                  and n != "__entry__"), None)
+    mult: Dict[str, int] = {n: 0 for n in comps}
+    if entry:
+        stack = [(entry, 1)]
+        seen_pairs = set()
+        while stack:
+            name, m = stack.pop()
+            if (name, m) in seen_pairs:
+                continue
+            seen_pairs.add((name, m))
+            mult[name] = max(mult.get(name, 0), m)
+            for cond, body, trip in edges.get(name, ()):
+                stack.append((cond, m * trip))
+                stack.append((body, m * trip))
+    # computations never reached via while edges (fusions, reducers, and the
+    # bodies of calls) execute with their caller's multiplier; approximate
+    # unvisited ones at 1× (fusion bodies contain no collectives; their dots
+    # are counted below via the caller line only when standalone)
+    for n in comps:
+        if mult.get(n, 0) == 0:
+            mult[n] = 1
+
+    # computations inlined into callers (fusion bodies, reducers): their
+    # interior ops never touch HBM — exclude from the traffic model
+    inlined = set()
+    for lines in comps.values():
+        for ln in lines:
+            for ref in re.findall(r"(?:calls|to_apply)=%?([\w.\-]+)", ln):
+                inlined.add(ref)
+
+    # root-op kind of each inlined computation (for in-place fusion handling)
+    inlined_root: Dict[str, str] = {}
+    for cname, lines in comps.items():
+        for ln in lines:
+            if ln.startswith("ROOT"):
+                inlined_root[cname] = ln
+
+    collectives: Dict[str, Dict[str, float]] = {}
+    dot_flops = 0.0
+    hbm_bytes = 0.0
+    _NO_TRAFFIC = ("tuple(", "get-tuple-element(", "parameter(", "constant(",
+                   "bitcast(", "after-all(", "partition-id(", "compare(",
+                   "add(", "iota(", "while(", "conditional(")
+    for name, lines in comps.items():
+        if name == "__entry__":
+            continue
+        m = mult[name]
+        # SSA def table: op name -> result type (to resolve dot operands)
+        defs: Dict[str, str] = {}
+        for ln in lines:
+            dm = _DEF.match(ln)
+            if dm:
+                defs[dm.group(1)] = dm.group(2)
+        for ln in lines:
+            cm = _COLL.search(ln)
+            if cm:
+                s = collectives.setdefault(cm.group(2), {"count": 0, "bytes": 0.0})
+                s["count"] += m
+                s["bytes"] += _type_bytes(cm.group(1)) * m
+            if name not in inlined:
+                dfm = _DEF.match(ln)
+                if dfm and not any(t in ln for t in _NO_TRAFFIC):
+                    # HBM traffic model: each top-level op writes its result
+                    # and reads its operands (fusion interiors excluded).
+                    # In-place update ops (dynamic-update-slice / scatter,
+                    # standalone or as a fusion root) touch only the updated
+                    # slice, not the aliased buffer — XLA aliases them.
+                    operand_refs = [
+                        r for r in re.findall(r"%([\w.\-]+)",
+                                              ln.split("(", 1)[-1])
+                        if r in defs]
+                    out_t = dfm.group(2)
+                    root = ""
+                    fm = re.search(r"calls=%?([\w.\-]+)", ln)
+                    if "fusion(" in ln and fm:
+                        root = inlined_root.get(fm.group(1), "")
+                    inplace = ("dynamic-update-slice" in ln or "scatter(" in ln
+                               or "dynamic-update-slice" in root
+                               or "scatter(" in root)
+                    if inplace:
+                        # in-place update: the output buffer(s) alias operand
+                        # buffer(s) of identical type — exclude one operand
+                        # per aliased output element (handles tuple-rooted
+                        # k+v cache DUS fusions); traffic = reads of the
+                        # remaining operands + write of the update slice
+                        pool = [f"{dt}[{dims}]"
+                                for dt, dims in _SHAPE.findall(out_t)]
+                        remaining = []
+                        for r in operand_refs:
+                            tm_ = _SHAPE.search(defs[r])
+                            key = (f"{tm_.group(1)}[{tm_.group(2)}]"
+                                   if tm_ else defs[r])
+                            if key in pool:
+                                pool.remove(key)
+                            else:
+                                remaining.append(r)
+                        rb = sum(_type_bytes(defs[r]) for r in remaining)
+                        upd = max((_type_bytes(defs[r]) for r in remaining),
+                                  default=0)
+                        hbm_bytes += (rb + upd) * m
+                    else:
+                        out_b = _type_bytes(out_t)
+                        in_b = sum(_type_bytes(defs[r]) for r in operand_refs)
+                        hbm_bytes += (out_b + in_b) * m
+            dm = _DOT.search(ln)
+            if dm:
+                out_elems = _shape_elems(_SHAPE.search(dm.group(1)).group(2))
+                km = _CONTRACT.search(ln)
+                rm = _DOT_LHS_REF.search(ln)
+                k = 1
+                if km and rm and rm.group(1) in defs:
+                    lhs_dims = [int(d) for d in
+                                _SHAPE.search(defs[rm.group(1)]).group(2).split(",")
+                                if d]
+                    for ci in km.group(1).split(","):
+                        if ci:
+                            k *= lhs_dims[int(ci)]
+                dot_flops += 2.0 * out_elems * k * m
+
+    return {
+        "collectives": collectives,
+        "collective_bytes_total": sum(s["bytes"] for s in collectives.values()),
+        "dot_flops": dot_flops,
+        "hbm_bytes": hbm_bytes,
+        "n_computations": len(comps) - 1,
+        "n_while_loops": sum(len(v) for v in edges.values()),
+    }

@@ -1,0 +1,30 @@
+"""Production mesh construction (DESIGN.md §5).
+
+Single pod: (16, 16) = 256 chips, axes (data, model) — ICI everywhere.
+Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model) — the pod axis
+rides DCN: params never shard over it (pure DP), gradients cross it once per
+step (optionally compressed, dist/compress.py).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state; only launch/dryrun.py forces the 512-device host platform.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_analytics_mesh", "POD_SHAPE", "MULTI_POD_SHAPE"]
+
+POD_SHAPE = (16, 16)
+MULTI_POD_SHAPE = (2, 16, 16)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = MULTI_POD_SHAPE if multi_pod else POD_SHAPE
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_analytics_mesh(n_devices: int | None = None):
+    """Flat 1-D mesh for pure table analytics (paper pipeline standalone)."""
+    n = n_devices or len(jax.devices())
+    return jax.make_mesh((n,), ("rows",))

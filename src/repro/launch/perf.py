@@ -1,0 +1,162 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+).strip()
+
+"""Perf hillclimb driver (EXPERIMENTS.md §Perf).
+
+Each registered VARIANT rebuilds one of the three hillclimb cells with a
+config delta, recompiles on the production mesh, and records the roofline
+terms next to the baseline.  The hypothesis / napkin math / verdict text
+lives in EXPERIMENTS.md §Perf; this driver produces the numbers.
+
+    python -m repro.launch.perf --cell mixtral-8x7b__train_4k --variant batched_dispatch
+    python -m repro.launch.perf --all
+"""
+import argparse
+import dataclasses as dc
+import json
+
+
+def _lm_variant_spec(mod, cfg_tf=None, opt=None, full_attention_only=None,
+                     expert_shard="auto"):
+    from ..configs import common as C
+
+    fao = (mod.SPEC.meta["full_attention_only"]
+           if full_attention_only is None else full_attention_only)
+    factory = (lambda: cfg_tf(mod.full_config())) if cfg_tf else mod.full_config
+    return C.lm_spec(mod.ARCH_ID, factory, mod.smoke_config,
+                     full_attention_only=fao, opt=opt,
+                     expert_shard=expert_shard)
+
+
+def build_variants():
+    from ..configs import arctic_480b, mixtral_8x7b, qwen2_72b
+    from ..train.optimizer import AdamWConfig
+
+    V = {}
+
+    # ---- cell 1: mixtral-8x7b train_4k — most collective-bound ----
+    V[("mixtral-8x7b", "train_4k", "batched_dispatch")] = _lm_variant_spec(
+        mixtral_8x7b,
+        cfg_tf=lambda c: dc.replace(c, moe=dc.replace(c.moe, dispatch="batched")),
+    )
+    V[("mixtral-8x7b", "train_4k", "batched+mp_attn")] = _lm_variant_spec(
+        mixtral_8x7b,
+        cfg_tf=lambda c: dc.replace(
+            c, attn_mixed_precision=True,
+            moe=dc.replace(c.moe, dispatch="batched")),
+    )
+    V[("mixtral-8x7b", "train_4k", "batched+cf1.0")] = _lm_variant_spec(
+        mixtral_8x7b,
+        cfg_tf=lambda c: dc.replace(
+            c, moe=dc.replace(c.moe, dispatch="batched", capacity_factor=1.0)),
+    )
+    # iteration 2: force weight all-gather over the FSDP dim (kill the 2 TiB
+    # activation all-reduce from the fs-sharded expert contraction)
+    _mix_wspecs = {"gate": (None, None, "model"), "up": (None, None, "model"),
+                   "down": (None, "model", None)}
+    V[("mixtral-8x7b", "train_4k", "batched+wgather")] = _lm_variant_spec(
+        mixtral_8x7b,
+        cfg_tf=lambda c: dc.replace(
+            c, moe=dc.replace(c.moe, dispatch="batched",
+                              weight_pspecs=_mix_wspecs)),
+    )
+    V[("mixtral-8x7b", "train_4k", "batched+wgather+mp_attn")] = _lm_variant_spec(
+        mixtral_8x7b,
+        cfg_tf=lambda c: dc.replace(
+            c, attn_mixed_precision=True,
+            moe=dc.replace(c.moe, dispatch="batched",
+                           weight_pspecs=_mix_wspecs)),
+    )
+
+    # iteration 3: re-shard expert ff over (data, model) at rest — gate/up
+    # contraction dims unsharded => no fs-contraction all-reduce
+    V[("mixtral-8x7b", "train_4k", "batched+ffshard")] = _lm_variant_spec(
+        mixtral_8x7b,
+        cfg_tf=lambda c: dc.replace(c, moe=dc.replace(c.moe, dispatch="batched")),
+        expert_shard="ff2d",
+    )
+    V[("mixtral-8x7b", "train_4k", "batched+ffshard+cf1.0")] = _lm_variant_spec(
+        mixtral_8x7b,
+        cfg_tf=lambda c: dc.replace(
+            c, moe=dc.replace(c.moe, dispatch="batched", capacity_factor=1.0)),
+        expert_shard="ff2d",
+    )
+
+    # ---- cell 2: arctic-480b train_4k — worst memory (17.4 GiB args) ----
+    bf16_opt = AdamWConfig(lr=3e-4, schedule="cosine", total_steps=10_000,
+                           state_dtype="bfloat16")
+    V[("arctic-480b", "train_4k", "bf16_opt_state")] = _lm_variant_spec(
+        arctic_480b, opt=bf16_opt)
+    V[("arctic-480b", "train_4k", "bf16_opt+batched")] = _lm_variant_spec(
+        arctic_480b,
+        cfg_tf=lambda c: dc.replace(c, moe=dc.replace(c.moe, dispatch="batched")),
+        opt=bf16_opt)
+    V[("arctic-480b", "train_4k", "bf16_opt+batched+mp_attn")] = _lm_variant_spec(
+        arctic_480b,
+        cfg_tf=lambda c: dc.replace(
+            c, attn_mixed_precision=True,
+            moe=dc.replace(c.moe, dispatch="batched")),
+        opt=bf16_opt)
+    # arctic is expert-parallel (128e over tp): at-rest gate/up (E,d,ff) is
+    # P(tp, fs, None) — gather the fs dim only
+    _arc_wspecs = {"gate": ("model", None, None), "up": ("model", None, None),
+                   "down": ("model", None, None)}
+    V[("arctic-480b", "train_4k", "bf16+batched+wgather")] = _lm_variant_spec(
+        arctic_480b,
+        cfg_tf=lambda c: dc.replace(
+            c, moe=dc.replace(c.moe, dispatch="batched",
+                              weight_pspecs=_arc_wspecs)),
+        opt=bf16_opt)
+
+    # ---- cell 3: qwen2-72b decode_32k — worst serving memory fraction ----
+    V[("qwen2-72b", "decode_32k", "mp_attn")] = _lm_variant_spec(
+        qwen2_72b, cfg_tf=lambda c: dc.replace(c, attn_mixed_precision=True))
+    V[("qwen2-72b", "decode_32k", "mp_attn+chunk4k")] = _lm_variant_spec(
+        qwen2_72b, cfg_tf=lambda c: dc.replace(
+            c, attn_mixed_precision=True, attn_chunk=4096))
+    return V
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default=None, help="arch__shape")
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/perf")
+    args = ap.parse_args()
+
+    from .dryrun import run_spec_cell
+
+    os.makedirs(args.out, exist_ok=True)
+    variants = build_variants()
+    for (arch, shape, vname), spec in variants.items():
+        if args.cell and f"{arch}__{shape}" != args.cell:
+            continue
+        if args.variant and vname != args.variant:
+            continue
+        tag = f"{arch}__{shape}__{args.mesh}__{vname}"
+        path = os.path.join(args.out, tag + ".json")
+        print(f"[perf] {tag}: lowering...", flush=True)
+        res = run_spec_cell(spec, arch, shape, args.mesh,
+                            hlo_path=os.path.join(args.out, tag + ".hlo.gz"))
+        res["variant"] = vname
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+        if res["status"] == "ok":
+            mem = res["memory_analysis"]
+            print(f"[perf] {tag}: ok args={mem.get('argument_size_in_bytes',0)/2**30:.2f}GiB "
+                  f"temp={mem.get('temp_size_in_bytes',0)/2**30:.2f}GiB "
+                  f"dotflops={res.get('dot_flops',0):.4g} "
+                  f"hbm={res.get('hbm_bytes',0)/2**30:.1f}GiB "
+                  f"coll={res.get('collective_bytes_total',0)/2**30:.2f}GiB",
+                  flush=True)
+        else:
+            print(f"[perf] {tag}: {res['status']} {res.get('error','')[:200]}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,313 @@
+"""GNN zoo: SchNet, PNA, EGNN, GraphSAGE — segment-op message passing.
+
+Message passing on TPU/JAX is edge-table gather -> segment-reduce — exactly
+the relational primitive family the paper's ETL queries use (DESIGN.md §4:
+fan-in/fan-out *is* in-degree/out-degree).  JAX has no sparse CSR; the edge
+list (senders, receivers) + ``jax.ops.segment_sum`` IS the graph engine, with
+the one-hot-matmul Pallas kernel (repro.kernels.segment_reduce) selectable
+for the small-segment regimes.
+
+Graphs are static-shape: node/edge buffers padded to capacity, with
+``n_nodes``/``n_edges`` live counts (padding edges point at node index
+``capacity`` and are dropped by the segment ops).  Batched small graphs
+(molecule shape) share one node buffer with a ``graph_ids`` column — a
+block-diagonal multigraph, i.e. just more rows in the edge table.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense, dense_init, layernorm, layernorm_init, mlp, mlp_init
+
+__all__ = [
+    "Graph", "segment_sum", "segment_mean", "segment_max", "segment_min",
+    "GraphSAGEConfig", "graphsage_init", "graphsage_apply",
+    "PNAConfig", "pna_init", "pna_apply",
+    "SchNetConfig", "schnet_init", "schnet_apply",
+    "EGNNConfig", "egnn_init", "egnn_apply",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Static-shape (possibly batched) graph.
+
+    nodes: (N, F) features; senders/receivers: (E,) int32 edge endpoints
+    (padding edges use index N_capacity — out of range, dropped);
+    positions: (N, 3) for geometric models; graph_ids: (N,) int32 segment id
+    of each node's graph for batched graphs (0 if single).
+    """
+
+    nodes: jnp.ndarray
+    senders: jnp.ndarray
+    receivers: jnp.ndarray
+    positions: Optional[jnp.ndarray] = None
+    graph_ids: Optional[jnp.ndarray] = None
+    n_graphs: int = 1
+
+    @property
+    def n_node_cap(self) -> int:
+        return self.nodes.shape[0]
+
+
+jax.tree_util.register_dataclass(
+    Graph,
+    data_fields=["nodes", "senders", "receivers", "positions", "graph_ids"],
+    meta_fields=["n_graphs"],
+)
+
+
+def _seg(op, data, seg_ids, num_segments):
+    full = op(data, seg_ids, num_segments=num_segments + 1)
+    return full[:num_segments]
+
+
+def segment_sum(data, seg_ids, num_segments):
+    return _seg(jax.ops.segment_sum, data, jnp.minimum(seg_ids, num_segments), num_segments)
+
+
+def segment_mean(data, seg_ids, num_segments):
+    s = segment_sum(data, seg_ids, num_segments)
+    cnt = segment_sum(jnp.ones((data.shape[0], 1), data.dtype), seg_ids, num_segments)
+    return s / jnp.maximum(cnt, 1)
+
+
+def segment_max(data, seg_ids, num_segments):
+    full = jax.ops.segment_max(
+        data, jnp.minimum(seg_ids, num_segments), num_segments=num_segments + 1
+    )
+    return jnp.where(jnp.isfinite(full[:num_segments]), full[:num_segments], 0)
+
+
+def segment_min(data, seg_ids, num_segments):
+    full = jax.ops.segment_min(
+        data, jnp.minimum(seg_ids, num_segments), num_segments=num_segments + 1
+    )
+    return jnp.where(jnp.isfinite(full[:num_segments]), full[:num_segments], 0)
+
+
+def _degree(g: Graph) -> jnp.ndarray:
+    n = g.n_node_cap
+    return segment_sum(jnp.ones((g.receivers.shape[0], 1), jnp.float32), g.receivers, n)
+
+
+# ------------------------------------------------------------------ GraphSAGE
+
+@dataclasses.dataclass(frozen=True)
+class GraphSAGEConfig:
+    name: str = "graphsage-reddit"
+    n_layers: int = 2
+    d_hidden: int = 128
+    d_in: int = 602
+    n_classes: int = 41
+    aggregator: str = "mean"
+    sample_sizes: tuple = (25, 10)
+    dtype: Any = jnp.float32
+
+
+def graphsage_init(key, cfg: GraphSAGEConfig):
+    keys = jax.random.split(key, 2 * cfg.n_layers + 1)
+    layers = []
+    d = cfg.d_in
+    for i in range(cfg.n_layers):
+        layers.append({
+            "self": dense_init(keys[2 * i], d, cfg.d_hidden, bias=True, dtype=cfg.dtype),
+            "neigh": dense_init(keys[2 * i + 1], d, cfg.d_hidden, bias=False, dtype=cfg.dtype),
+        })
+        d = cfg.d_hidden
+    return {"layers": layers, "out": dense_init(keys[-1], d, cfg.n_classes, bias=True, dtype=cfg.dtype)}
+
+
+def graphsage_apply(p, cfg: GraphSAGEConfig, g: Graph) -> jnp.ndarray:
+    h = g.nodes
+    n = g.n_node_cap
+    for layer in p["layers"]:
+        msgs = h[g.senders]
+        agg = segment_mean(msgs, g.receivers, n) if cfg.aggregator == "mean" else \
+            segment_max(msgs, g.receivers, n)
+        h = jax.nn.relu(dense(layer["self"], h) + dense(layer["neigh"], agg))
+        h = h / jnp.maximum(jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-6)
+    return dense(p["out"], h)  # (N, n_classes) node logits
+
+
+# ------------------------------------------------------------------------ PNA
+
+@dataclasses.dataclass(frozen=True)
+class PNAConfig:
+    name: str = "pna"
+    n_layers: int = 4
+    d_hidden: int = 75
+    d_in: int = 16
+    n_out: int = 1
+    aggregators: tuple = ("mean", "max", "min", "std")
+    scalers: tuple = ("identity", "amplification", "attenuation")
+    delta: float = 2.5  # avg log-degree of the training set (paper's δ)
+    dtype: Any = jnp.float32
+
+
+def pna_init(key, cfg: PNAConfig):
+    keys = jax.random.split(key, 3 * cfg.n_layers + 2)
+    d = cfg.d_hidden
+    layers = []
+    for i in range(cfg.n_layers):
+        n_cat = len(cfg.aggregators) * len(cfg.scalers) * d + d
+        layers.append({
+            "pre": mlp_init(keys[3 * i], [2 * d, d], dtype=cfg.dtype),      # message MLP
+            "post": mlp_init(keys[3 * i + 1], [n_cat, d], dtype=cfg.dtype),  # update MLP
+            "norm": layernorm_init(d, cfg.dtype),
+        })
+    return {
+        "encode": dense_init(keys[-2], cfg.d_in, d, bias=True, dtype=cfg.dtype),
+        "layers": layers,
+        "out": mlp_init(keys[-1], [d, d, cfg.n_out], dtype=cfg.dtype),
+    }
+
+
+def pna_apply(p, cfg: PNAConfig, g: Graph) -> jnp.ndarray:
+    n = g.n_node_cap
+    h = dense(p["encode"], g.nodes)
+    deg = _degree(g)
+    log_deg = jnp.log(deg + 1.0)
+    scale = {
+        "identity": jnp.ones_like(log_deg),
+        "amplification": log_deg / cfg.delta,
+        "attenuation": cfg.delta / jnp.maximum(log_deg, 1e-3),
+    }
+    for layer in p["layers"]:
+        m = mlp(layer["pre"], jnp.concatenate([h[g.senders], h[g.receivers]], -1))
+        aggs = []
+        mean = segment_mean(m, g.receivers, n)
+        for a in cfg.aggregators:
+            if a == "mean":
+                agg = mean
+            elif a == "max":
+                agg = segment_max(m, g.receivers, n)
+            elif a == "min":
+                agg = segment_min(m, g.receivers, n)
+            elif a == "std":
+                sq = segment_mean(m * m, g.receivers, n)
+                agg = jnp.sqrt(jnp.maximum(sq - mean * mean, 0.0) + 1e-5)
+            for s in cfg.scalers:
+                aggs.append(agg * scale[s])
+        upd = mlp(layer["post"], jnp.concatenate(aggs + [h], -1))
+        h = h + layernorm(layer["norm"], upd)  # residual
+    if g.graph_ids is not None:
+        pooled = segment_mean(h, g.graph_ids, g.n_graphs)
+    else:
+        pooled = jnp.mean(h, 0, keepdims=True)
+    return mlp(p["out"], pooled, act=jax.nn.relu)
+
+
+# --------------------------------------------------------------------- SchNet
+
+@dataclasses.dataclass(frozen=True)
+class SchNetConfig:
+    name: str = "schnet"
+    n_interactions: int = 3
+    d_hidden: int = 64
+    n_rbf: int = 300
+    cutoff: float = 10.0
+    n_atom_types: int = 100
+    dtype: Any = jnp.float32
+
+
+def schnet_init(key, cfg: SchNetConfig):
+    keys = jax.random.split(key, 4 * cfg.n_interactions + 2)
+    inter = []
+    d = cfg.d_hidden
+    for i in range(cfg.n_interactions):
+        inter.append({
+            "filter": mlp_init(keys[4 * i], [cfg.n_rbf, d, d], dtype=cfg.dtype),
+            "in": dense_init(keys[4 * i + 1], d, d, bias=False, dtype=cfg.dtype),
+            "out1": dense_init(keys[4 * i + 2], d, d, bias=True, dtype=cfg.dtype),
+            "out2": dense_init(keys[4 * i + 3], d, d, bias=True, dtype=cfg.dtype),
+        })
+    return {
+        "embed": jax.random.normal(keys[-2], (cfg.n_atom_types, d), cfg.dtype) * 0.1,
+        "interactions": inter,
+        "readout": mlp_init(keys[-1], [d, d // 2, 1], dtype=cfg.dtype),
+    }
+
+
+def _shifted_softplus(x):
+    return jax.nn.softplus(x) - jnp.log(2.0)
+
+
+def schnet_apply(p, cfg: SchNetConfig, g: Graph) -> jnp.ndarray:
+    """g.nodes: (N, 1) int atom types; g.positions: (N, 3). Returns energy/graph."""
+    n = g.n_node_cap
+    z = g.nodes[:, 0].astype(jnp.int32)
+    h = p["embed"][jnp.clip(z, 0, cfg.n_atom_types - 1)]
+    dist = jnp.linalg.norm(
+        g.positions[g.senders] - g.positions[g.receivers] + 1e-12, axis=-1
+    )  # (E,)
+    mu = jnp.linspace(0.0, cfg.cutoff, cfg.n_rbf, dtype=jnp.float32)
+    gamma = 10.0
+    rbf = jnp.exp(-gamma * (dist[:, None] - mu[None, :]) ** 2)  # (E, n_rbf)
+    # cosine cutoff envelope
+    env = 0.5 * (jnp.cos(jnp.pi * jnp.clip(dist / cfg.cutoff, 0, 1)) + 1.0)
+    for layer in p["interactions"]:
+        w = mlp(layer["filter"], rbf, act=_shifted_softplus, final_act=True)
+        msg = dense(layer["in"], h)[g.senders] * w * env[:, None]
+        agg = segment_sum(msg, g.receivers, n)
+        v = _shifted_softplus(dense(layer["out1"], agg))
+        h = h + dense(layer["out2"], v)
+    atom_e = mlp(p["readout"], h, act=_shifted_softplus)  # (N, 1)
+    if g.graph_ids is not None:
+        return segment_sum(atom_e, g.graph_ids, g.n_graphs)
+    return jnp.sum(atom_e, 0, keepdims=True)
+
+
+# ----------------------------------------------------------------------- EGNN
+
+@dataclasses.dataclass(frozen=True)
+class EGNNConfig:
+    name: str = "egnn"
+    n_layers: int = 4
+    d_hidden: int = 64
+    d_in: int = 16
+    dtype: Any = jnp.float32
+
+
+def egnn_init(key, cfg: EGNNConfig):
+    keys = jax.random.split(key, 3 * cfg.n_layers + 2)
+    d = cfg.d_hidden
+    layers = []
+    for i in range(cfg.n_layers):
+        layers.append({
+            "edge": mlp_init(keys[3 * i], [2 * d + 1, d, d], dtype=cfg.dtype),
+            "coord": mlp_init(keys[3 * i + 1], [d, d, 1], dtype=cfg.dtype),
+            "node": mlp_init(keys[3 * i + 2], [2 * d, d, d], dtype=cfg.dtype),
+        })
+    return {
+        "encode": dense_init(keys[-2], cfg.d_in, d, bias=True, dtype=cfg.dtype),
+        "layers": layers,
+        "out": mlp_init(keys[-1], [d, d, 1], dtype=cfg.dtype),
+    }
+
+
+def egnn_apply(p, cfg: EGNNConfig, g: Graph):
+    """E(n)-equivariant layers. Returns (graph outputs, final positions)."""
+    n = g.n_node_cap
+    h = dense(p["encode"], g.nodes)
+    x = g.positions
+    for layer in p["layers"]:
+        diff = x[g.senders] - x[g.receivers]          # (E, 3)
+        d2 = jnp.sum(diff * diff, -1, keepdims=True)  # (E, 1)
+        m = mlp(layer["edge"], jnp.concatenate([h[g.senders], h[g.receivers], d2], -1),
+                final_act=True)
+        w = mlp(layer["coord"], m)                    # (E, 1)
+        # normalized coordinate update keeps equivariance + stability
+        upd = segment_mean(diff * jnp.tanh(w), g.receivers, n)
+        x = x + upd
+        agg = segment_sum(m, g.receivers, n)
+        h = h + mlp(layer["node"], jnp.concatenate([h, agg], -1))
+    if g.graph_ids is not None:
+        pooled = segment_mean(h, g.graph_ids, g.n_graphs)
+    else:
+        pooled = jnp.mean(h, 0, keepdims=True)
+    return mlp(p["out"], pooled), x

@@ -1,0 +1,133 @@
+"""Shared neural-net layers (pure-functional, no flax — params are pytrees).
+
+Every layer is an (init, apply) pair.  Params are plain dicts of jnp arrays
+so they pjit/scan/checkpoint transparently and partition specs can be zipped
+over them (repro.launch.sharding).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dense_init",
+    "dense",
+    "rmsnorm_init",
+    "rmsnorm",
+    "layernorm_init",
+    "layernorm",
+    "rope_frequencies",
+    "apply_rope",
+    "swiglu_init",
+    "swiglu",
+    "mlp_init",
+    "mlp",
+    "embedding_init",
+    "cross_entropy_loss",
+]
+
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False, scale: Optional[float] = None, dtype=jnp.float32):
+    scale = (1.0 / math.sqrt(d_in)) if scale is None else scale
+    p = {"w": jax.random.normal(key, (d_in, d_out), dtype) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"g": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * p["g"]
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * p["g"] + p["b"]
+
+
+def rope_frequencies(d_head: int, max_pos: int, theta: float = 10000.0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    inv = 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+    t = jnp.arange(max_pos, dtype=jnp.float32)
+    freqs = jnp.outer(t, inv)  # (L, d/2)
+    return jnp.cos(freqs), jnp.sin(freqs)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray, positions: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, H, L, D); positions: (B, L) or (L,) absolute token positions."""
+    c = cos[positions]  # (..., L, D/2)
+    s = sin[positions]
+    if c.ndim == 2:  # (L, D/2) -> broadcast batch
+        c, s = c[None, None], s[None, None]
+    else:  # (B, L, D/2)
+        c, s = c[:, None], s[:, None]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate(
+        [x1 * c - x2 * s, x2 * c + x1 * s], axis=-1
+    ).astype(x.dtype)
+
+
+def swiglu_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d_model, d_ff, dtype=dtype),
+        "up": dense_init(k2, d_model, d_ff, dtype=dtype),
+        "down": dense_init(k3, d_ff, d_model, dtype=dtype),
+    }
+
+
+def swiglu(p, x: jnp.ndarray) -> jnp.ndarray:
+    return dense(p["down"], jax.nn.silu(dense(p["gate"], x)) * dense(p["up"], x))
+
+
+def mlp_init(key, dims, *, bias: bool = True, dtype=jnp.float32):
+    """Plain MLP: dims = [d_in, h1, ..., d_out]."""
+    keys = jax.random.split(key, len(dims) - 1)
+    return {
+        f"l{i}": dense_init(k, dims[i], dims[i + 1], bias=bias, dtype=dtype)
+        for i, k in enumerate(keys)
+    }
+
+
+def mlp(p, x: jnp.ndarray, act=jax.nn.silu, final_act: bool = False) -> jnp.ndarray:
+    n = len(p)
+    for i in range(n):
+        x = dense(p[f"l{i}"], x)
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def embedding_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray, mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean token cross-entropy in fp32. logits (..., V); labels (...)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

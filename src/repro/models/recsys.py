@@ -1,0 +1,167 @@
+"""xDeepFM (CIN + DNN + linear) with a from-scratch EmbeddingBag.
+
+JAX has no ``nn.EmbeddingBag``; per the assignment spec we build it from
+``jnp.take`` + ``jax.ops.segment_sum`` — which is, once again, the paper's
+gather + groupby-sum ETL pair (DESIGN.md §4).  The embedding *lookup* is the
+hot path: tables are huge (10^6–10^9 rows), lookups are random gathers —
+sharding the row dimension over the "model" mesh axis turns each lookup into
+a partitioned gather + psum under GSPMD.
+
+CIN (Compressed Interaction Network, xDeepFM's contribution): with
+X^0 (B, m, D) field embeddings and X^k (B, H_k, D),
+
+    X^{k+1}[b,h,d] = sum_{i,j} W^{k}[h,i,j] · X^0[b,i,d] · X^k[b,j,d]
+
+i.e. an outer product along the field axes compressed by a learned kernel,
+computed here as two einsums (no (B, m, H_k, D) materialization).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense, dense_init, mlp, mlp_init
+
+__all__ = ["XDeepFMConfig", "xdeepfm_init", "xdeepfm_apply",
+           "embedding_bag", "retrieval_scores"]
+
+
+@dataclasses.dataclass(frozen=True)
+class XDeepFMConfig:
+    name: str = "xdeepfm"
+    n_sparse: int = 39
+    embed_dim: int = 10
+    cin_layers: tuple = (200, 200, 200)
+    mlp_dims: tuple = (400, 400)
+    vocab_sizes: Optional[tuple] = None  # per-field; default heavy-tailed mix
+    dtype: Any = jnp.float32
+
+    def field_vocabs(self) -> Tuple[int, ...]:
+        if self.vocab_sizes is not None:
+            return tuple(self.vocab_sizes)
+        # Criteo-like heavy tail: a few huge fields, many small ones
+        sizes = []
+        for i in range(self.n_sparse):
+            if i % 13 == 0:
+                sizes.append(10_000_000)
+            elif i % 5 == 0:
+                sizes.append(1_000_000)
+            elif i % 3 == 0:
+                sizes.append(100_000)
+            else:
+                sizes.append(10_000)
+        return tuple(sizes)
+
+
+def embedding_bag(
+    table: jnp.ndarray,
+    indices: jnp.ndarray,
+    bag_ids: jnp.ndarray,
+    num_bags: int,
+    weights: Optional[jnp.ndarray] = None,
+    mode: str = "sum",
+) -> jnp.ndarray:
+    """``nn.EmbeddingBag`` from gather + segment-reduce.
+
+    table (V, D); indices (nnz,) row ids; bag_ids (nnz,) output bag of each
+    index (sorted not required); returns (num_bags, D).
+    """
+    rows = jnp.take(table, indices, axis=0)          # gather
+    if weights is not None:
+        rows = rows * weights[:, None]
+    seg = jnp.minimum(bag_ids, num_bags)
+    out = jax.ops.segment_sum(rows, seg, num_segments=num_bags + 1)[:num_bags]
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(
+            jnp.ones_like(bag_ids, table.dtype), seg, num_segments=num_bags + 1
+        )[:num_bags]
+        out = out / jnp.maximum(cnt[:, None], 1)
+    return out
+
+
+def xdeepfm_init(key, cfg: XDeepFMConfig):
+    vocabs = cfg.field_vocabs()
+    keys = jax.random.split(key, cfg.n_sparse + len(cfg.cin_layers) + 4)
+    tables = {
+        f"f{i}": jax.random.normal(keys[i], (v, cfg.embed_dim), cfg.dtype) * 0.01
+        for i, v in enumerate(vocabs)
+    }
+    cin = []
+    h_prev = cfg.n_sparse
+    for li, h in enumerate(cfg.cin_layers):
+        cin.append(
+            jax.random.normal(
+                keys[cfg.n_sparse + li], (h, cfg.n_sparse, h_prev), cfg.dtype
+            ) * (2.0 / (cfg.n_sparse * h_prev)) ** 0.5
+        )
+        h_prev = h
+    d_flat = cfg.n_sparse * cfg.embed_dim
+    return {
+        "tables": tables,
+        "linear": {
+            f"f{i}": jax.random.normal(keys[-4], (v, 1), cfg.dtype) * 0.01
+            for i, v in enumerate(vocabs)
+        },
+        "cin": cin,
+        "cin_out": dense_init(keys[-3], sum(cfg.cin_layers), 1, bias=False, dtype=cfg.dtype),
+        "mlp": mlp_init(keys[-2], [d_flat, *cfg.mlp_dims, 1], dtype=cfg.dtype),
+        "bias": jnp.zeros((), cfg.dtype),
+    }
+
+
+def _cin(p_cin, cin_out, x0: jnp.ndarray) -> jnp.ndarray:
+    """x0: (B, m, D) -> CIN logit (B, 1)."""
+    xk = x0
+    pooled = []
+    for w in p_cin:
+        # z[b,i,j,d] = x0[b,i,d]*xk[b,j,d];  x_next[b,h,d] = sum_ij w[h,i,j] z
+        # contracted as: (b,i,d),(h,i,j)->(b,h,j,d) then with xk -> (b,h,d)
+        t = jnp.einsum("bid,hij->bhjd", x0, w)
+        xk = jnp.einsum("bhjd,bjd->bhd", t, xk)
+        pooled.append(jnp.sum(xk, axis=-1))  # (B, h)
+    return dense({"w": cin_out["w"]}, jnp.concatenate(pooled, -1))
+
+
+def xdeepfm_apply(p, cfg: XDeepFMConfig, sparse_ids: jnp.ndarray) -> jnp.ndarray:
+    """sparse_ids: (B, n_sparse) one id per field. Returns logits (B,)."""
+    b = sparse_ids.shape[0]
+    embs = jnp.stack(
+        [jnp.take(p["tables"][f"f{i}"], sparse_ids[:, i], axis=0)
+         for i in range(cfg.n_sparse)],
+        axis=1,
+    )  # (B, m, D)
+    linear = sum(
+        jnp.take(p["linear"][f"f{i}"], sparse_ids[:, i], axis=0)
+        for i in range(cfg.n_sparse)
+    )  # (B, 1)
+    cin_logit = _cin(p["cin"], p["cin_out"], embs)
+    deep = mlp(p["mlp"], embs.reshape(b, -1), act=jax.nn.relu)
+    return (linear + cin_logit + deep)[:, 0] + p["bias"]
+
+
+def retrieval_scores(
+    p, cfg: XDeepFMConfig, query_ids: jnp.ndarray, candidate_emb: jnp.ndarray
+) -> jnp.ndarray:
+    """Retrieval shape: one query vs 10^6 candidates as a batched dot.
+
+    The query tower is the mean field embedding; candidates are pre-computed
+    item embeddings (n_cand, D).  A single (1, D) @ (D, n_cand) matmul — NOT
+    a loop — per the assignment note.
+    """
+    embs = jnp.stack(
+        [jnp.take(p["tables"][f"f{i}"], query_ids[:, i], axis=0)
+         for i in range(cfg.n_sparse)],
+        axis=1,
+    )  # (B, m, D)
+    q = jnp.mean(embs, axis=1)  # (B, D)
+    return q @ candidate_emb.T  # (B, n_cand)
+
+
+def bce_loss(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logits = logits.astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )

@@ -1,0 +1,3 @@
+"""Training substrate: optimizer, loop, checkpointing, elasticity."""
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+from .loop import Trainer, TrainState

@@ -1,0 +1,102 @@
+"""Elastic scaling + straggler mitigation for 1000+-node runs.
+
+What real TPU fleets do, mapped onto JAX primitives:
+
+* **Failure model** — a pod loses chips; the job restarts from the last
+  committed checkpoint on a *smaller (or larger) mesh*.  Because our
+  checkpoints are host-gathered full arrays (train/checkpoint.py) and all
+  sharding lives in NamedSharding specs, re-sharding is a ``device_put`` with
+  the new mesh's specs: ``reshard_tree`` below.  Any mesh whose axis sizes
+  divide the array dims works — elasticity is a pure launcher decision.
+
+* **Straggler mitigation** — (a) deterministic data assignment: the data
+  pipeline keys every batch by ``(step, shard_id)`` (data/pipeline.py), so a
+  restarted/relocated worker replays identical data — no coordination needed;
+  (b) a step-time watchdog (``StragglerWatchdog``) flags steps slower than
+  k·median, the signal production launchers use to trigger hot-spare swaps;
+  (c) cross-pod gradient reduction can run compressed (dist/compress.py) to
+  shrink the DCN critical path a straggling pod sits on.
+
+* **Grace restarts** — ``ElasticTrainer`` in loop.py wires these together:
+  catch failure -> restore_latest -> remesh -> continue.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Deque, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+__all__ = ["reshard_tree", "StragglerWatchdog", "simulate_failure_and_resume"]
+
+
+def reshard_tree(tree, mesh: Mesh, spec_tree):
+    """Place a (host or device) pytree onto ``mesh`` per matching specs.
+
+    ``spec_tree`` is a pytree of PartitionSpec congruent to ``tree`` (a bare
+    PartitionSpec broadcasts).  This is the elastic-resume primitive: the same
+    checkpoint restores onto any mesh shape whose axes divide the dims.
+    """
+    if isinstance(spec_tree, PartitionSpec):
+        spec_tree = jax.tree.map(lambda _: spec_tree, tree)
+
+    def put(x, spec):
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree.map(put, tree, spec_tree)
+
+
+class StragglerWatchdog:
+    """Flags steps slower than ``threshold ×`` the rolling median.
+
+    On a fleet this signal feeds the controller that swaps in hot spares; in
+    single-process runs it is logged.  Window is small so the detector adapts
+    to phase changes (compile, checkpoint-write steps are excluded by the
+    caller via ``exclude=True``).
+    """
+
+    def __init__(self, window: int = 50, threshold: float = 2.0):
+        self.times: Deque[float] = deque(maxlen=window)
+        self.threshold = threshold
+        self.flagged = 0
+        self._t0: Optional[float] = None
+
+    def start(self) -> None:
+        self._t0 = time.perf_counter()
+
+    def stop(self, exclude: bool = False) -> bool:
+        """Returns True if this step is a straggler."""
+        if self._t0 is None:
+            return False
+        dt = time.perf_counter() - self._t0
+        self._t0 = None
+        if exclude or len(self.times) < 5:
+            if not exclude:
+                self.times.append(dt)
+            return False
+        med = float(np.median(self.times))
+        self.times.append(dt)
+        if dt > self.threshold * med:
+            self.flagged += 1
+            return True
+        return False
+
+
+def simulate_failure_and_resume(ckpt_dir: str, target_tree, old_mesh: Mesh,
+                                new_mesh: Mesh, spec_tree):
+    """Test/demo helper: 'lose' the old mesh, restore onto the new one.
+
+    Returns (step, resharded_tree).  Exercises exactly the code path a real
+    failure takes: restore_latest (host arrays) -> reshard_tree (new mesh).
+    """
+    from .checkpoint import restore_latest
+
+    out = restore_latest(ckpt_dir, target_tree)
+    if out is None:
+        raise RuntimeError(f"no checkpoint to resume from in {ckpt_dir}")
+    step, tree, _ = out
+    del old_mesh  # the failed mesh is never touched again
+    return step, reshard_tree(tree, new_mesh, spec_tree)

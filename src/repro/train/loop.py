@@ -1,0 +1,123 @@
+"""Generic training loop: jit'd step + checkpoint/restart + straggler watch.
+
+``Trainer`` owns the full production loop skeleton:
+  loss_fn -> value_and_grad -> adamw_update, jit with donated state,
+  periodic atomic checkpoints, automatic resume from the latest commit,
+  straggler watchdog, deterministic data via repro.data.pipeline.
+
+Distribution is orthogonal: pass ``shardings=(state_sharding, batch_sharding)``
+and the same loop drives a pjit'd step on any mesh (repro.launch.train).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .checkpoint import restore_latest, save_checkpoint
+from .elastic import StragglerWatchdog
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["TrainState", "Trainer"]
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+
+    def tree(self):
+        return {"params": self.params, "opt": self.opt}
+
+
+class Trainer:
+    def __init__(
+        self,
+        loss_fn: Callable,              # (params, batch) -> (loss, metrics)
+        opt_cfg: AdamWConfig,
+        ckpt_dir: Optional[str] = None,
+        ckpt_every: int = 100,
+        keep: int = 3,
+        donate: bool = True,
+    ):
+        self.loss_fn = loss_fn
+        self.opt_cfg = opt_cfg
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.keep = keep
+        self.watchdog = StragglerWatchdog()
+
+        def step(params, opt, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                self.loss_fn, has_aux=True
+            )(params, batch)
+            new_params, new_opt, opt_metrics = adamw_update(
+                grads, opt, params, self.opt_cfg
+            )
+            metrics = dict(metrics or {})
+            metrics.update(opt_metrics)
+            metrics["loss"] = loss
+            return new_params, new_opt, metrics
+
+        self._step = jax.jit(step, donate_argnums=(0, 1) if donate else ())
+
+    # -- lifecycle -----------------------------------------------------------
+    def init_state(self, params) -> TrainState:
+        return TrainState(
+            params=params, opt=adamw_init(params, self.opt_cfg.state_dtype))
+
+    def maybe_resume(self, state: TrainState) -> Tuple[TrainState, int]:
+        """Restore the latest committed checkpoint if one exists."""
+        if not self.ckpt_dir:
+            return state, 0
+        out = restore_latest(self.ckpt_dir, state.tree())
+        if out is None:
+            return state, 0
+        step, tree, _extra = out
+        return TrainState(params=tree["params"], opt=tree["opt"]), step
+
+    def checkpoint(self, state: TrainState, step: int) -> None:
+        if self.ckpt_dir:
+            save_checkpoint(
+                self.ckpt_dir, step, state.tree(),
+                extra={"wall_time": time.time()}, keep=self.keep,
+            )
+
+    # -- main loop ------------------------------------------------------------
+    def run(
+        self,
+        state: TrainState,
+        batches: Iterator[Dict[str, Any]],
+        n_steps: int,
+        log_every: int = 10,
+        log_fn: Callable[[int, Dict], None] = None,
+    ) -> Tuple[TrainState, Dict[str, float]]:
+        state, start = self.maybe_resume(state)
+        history: Dict[str, float] = {}
+        for step in range(start, n_steps):
+            batch = next(batches)
+            batch = {k: v for k, v in batch.items() if k not in ("step", "shard")}
+            self.watchdog.start()
+            state.params, state.opt, metrics = self._step(
+                state.params, state.opt, batch
+            )
+            is_ckpt_step = self.ckpt_every and (step + 1) % self.ckpt_every == 0
+            straggler = self.watchdog.stop(exclude=step == start or bool(is_ckpt_step))
+            if is_ckpt_step:
+                self.checkpoint(state, step + 1)
+            if log_every and (step % log_every == 0 or step == n_steps - 1):
+                history = {k: float(v) for k, v in metrics.items()}
+                history["step"] = step
+                history["straggler"] = bool(straggler)
+                if log_fn:
+                    log_fn(step, history)
+                else:
+                    msg = " ".join(
+                        f"{k}={v:.5g}" if isinstance(v, float) else f"{k}={v}"
+                        for k, v in history.items()
+                    )
+                    print(f"[train] {msg}", flush=True)
+        return state, history

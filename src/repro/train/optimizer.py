@@ -1,0 +1,128 @@
+"""Optimizers + LR schedules (pure pytree functions, no optax).
+
+AdamW with decoupled weight decay; schedules: linear-warmup cosine and WSD
+(Warmup–Stable–Decay, the MiniCPM schedule [arXiv:2404.06395]) — WSD holds a
+constant plateau after warmup and decays only in the final fraction, which
+is what minicpm-2b's config selects.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update",
+           "cosine_schedule", "wsd_schedule", "global_norm", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: Optional[float] = 1.0
+    schedule: str = "cosine"        # "cosine" | "wsd" | "constant"
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    decay_fraction: float = 0.1     # WSD: final fraction spent decaying
+    state_dtype: str = "float32"    # "bfloat16" halves m/v HBM (arctic-class
+                                    # models exceed 16 GB/chip with f32 state;
+                                    # math still runs in f32 — §Perf #2)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), n
+
+
+def cosine_schedule(cfg: AdamWConfig) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(cfg.warmup_steps, 1)
+        prog = (step - cfg.warmup_steps) / jnp.maximum(
+            cfg.total_steps - cfg.warmup_steps, 1
+        )
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * jnp.clip(prog, 0, 1)))
+        return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+    return lr
+
+
+def wsd_schedule(cfg: AdamWConfig) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    """Warmup -> stable plateau -> short decay (MiniCPM WSD)."""
+    decay_steps = int(cfg.total_steps * cfg.decay_fraction)
+    stable_end = cfg.total_steps - decay_steps
+
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(cfg.warmup_steps, 1)
+        decay_prog = (step - stable_end) / jnp.maximum(decay_steps, 1)
+        # MiniCPM uses exponential-ish decay; 10**(-prog) spans one decade
+        decay = jnp.power(10.0, -jnp.clip(decay_prog, 0, 1))
+        val = jnp.where(step < cfg.warmup_steps, warm,
+                        jnp.where(step < stable_end, 1.0, decay))
+        return cfg.lr * val
+    return lr
+
+
+def make_schedule(cfg: AdamWConfig):
+    if cfg.schedule == "cosine":
+        return cosine_schedule(cfg)
+    if cfg.schedule == "wsd":
+        return wsd_schedule(cfg)
+    return lambda step: jnp.asarray(cfg.lr, jnp.float32)
+
+
+def adamw_init(params, state_dtype: str = "float32") -> Dict:
+    dt = jnp.dtype(state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+
+
+def adamw_update(grads, state, params, cfg: AdamWConfig):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    sched = make_schedule(cfg)
+    gnorm = global_norm(grads)
+    if cfg.grad_clip is not None:
+        grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    lr = sched(step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    state_dt = jnp.dtype(cfg.state_dtype)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (m32.astype(state_dt), v32.astype(state_dt),
+                (p.astype(jnp.float32) - lr * delta).astype(p.dtype))
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    new_state = {"step": step, "m": new_m, "v": new_v}
+    return new_p, new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,94 @@
+"""Per-architecture smoke tests: reduced config, one real step on CPU,
+shape + no-NaN asserts (the FULL configs are exercised only via the dry-run).
+"""
+import jax
+import pytest
+
+from repro.configs import ALL_ARCHS, get_spec
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_arch_smoke(arch):
+    spec = get_spec(arch)
+    out = spec.smoke()
+    assert isinstance(out, dict) and out, f"{arch} smoke returned nothing"
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_arch_cells_build_abstractly(arch):
+    """Every applicable (arch × shape) builds its dry-run cell (no compile).
+
+    This validates config plumbing (abstract shapes, spec congruence) cheaply;
+    the real lower+compile runs in launch/dryrun.py on the 512-dev mesh.
+    """
+    from repro.configs.common import MeshAxes
+
+    spec = get_spec(arch)
+    mp = MeshAxes(dp_axes=("data",))  # no concrete mesh: shard_map cells skip
+    built = 0
+    for shape in spec.shapes:
+        cell = spec.build_cell(shape, mp)
+        if cell is None:
+            continue
+        built += 1
+        flat_args = jax.tree.leaves(cell.abstract_args)
+        flat_specs = jax.tree.leaves(
+            cell.arg_pspecs,
+            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+        )
+        assert flat_args, f"{arch}/{shape}: no inputs"
+        assert len(flat_args) == len(flat_specs), (
+            f"{arch}/{shape}: args/specs tree mismatch "
+            f"({len(flat_args)} vs {len(flat_specs)})"
+        )
+    if spec.family != "pipeline":
+        assert built >= 3, f"{arch}: only {built} applicable shapes"
+
+
+def test_full_attention_archs_skip_long_500k():
+    from repro.configs.common import MeshAxes
+
+    mp = MeshAxes(dp_axes=("data",))
+    for arch in ("qwen2-72b", "minicpm-2b", "granite-8b", "arctic-480b"):
+        assert get_spec(arch).build_cell("long_500k", mp) is None
+    assert get_spec("mixtral-8x7b").build_cell("long_500k", mp) is not None
+
+
+def test_optimized_configs_equivalent_semantics():
+    """Adopted §Perf variants keep model semantics (capacity slack => equal)."""
+    import dataclasses as dc
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.models.transformer import TransformerConfig, forward, init_params
+    from repro.models.moe import MoEConfig
+
+    base = TransformerConfig(
+        name="t", n_layers=2, d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
+        vocab=64, dtype=jnp.float32, remat=False,
+        moe=MoEConfig(n_experts=4, top_k=2, d_ff=48, capacity_factor=8.0))
+    opt = dc.replace(base, moe=dc.replace(base.moe, dispatch="batched"))
+    p = init_params(jax.random.key(0), base)
+    toks = jax.random.randint(jax.random.key(1), (4, 16), 0, 64)
+    lg, _ = forward(p, base, toks)
+    lb, _ = forward(p, opt, toks)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(lb), rtol=1e-4, atol=1e-5)
+
+
+def test_bf16_optimizer_state_trains():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+
+    cfg = AdamWConfig(lr=0.05, weight_decay=0.0, warmup_steps=0,
+                      total_steps=100, schedule="constant",
+                      state_dtype="bfloat16")
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = adamw_init(params, cfg.state_dtype)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+    for _ in range(60):
+        params, state, _ = adamw_update({"w": 2 * params["w"]}, state, params, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.6

@@ -1,0 +1,173 @@
+"""Unit + property tests for the jaxdf relational primitives (repro.core.ops)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    factorize,
+    groupby_aggregate,
+    hash_permutation,
+    multi_key_sort,
+    random_permutation,
+    unique,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _pad(x, cap, fill=-1):
+    x = np.asarray(x)
+    return np.concatenate([x, np.full(cap - len(x), fill, x.dtype)])
+
+
+# ---------------------------------------------------------------- multi_key_sort
+
+def test_multi_key_sort_matches_lexsort():
+    rng = np.random.default_rng(1)
+    a = rng.integers(0, 10, 64).astype(np.int32)
+    b = rng.integers(0, 10, 64).astype(np.int32)
+    (sa, sb), _ = multi_key_sort([a, b])
+    order = np.lexsort((b, a))
+    np.testing.assert_array_equal(np.asarray(sa), a[order])
+    np.testing.assert_array_equal(np.asarray(sb), b[order])
+
+
+def test_multi_key_sort_pushes_invalid_tail_to_end():
+    # a valid row whose key equals the dtype max must still sort before padding
+    a = np.array([5, np.iinfo(np.int32).max, 3, 999, 999], np.int32)
+    (sa,), (idx,) = multi_key_sort([a], [np.arange(5, dtype=np.int32)], n_valid=3)
+    # first 3 sorted entries are exactly rows {0,1,2}
+    assert set(np.asarray(idx)[:3].tolist()) == {0, 1, 2}
+    np.testing.assert_array_equal(np.asarray(sa)[:3], [3, 5, np.iinfo(np.int32).max])
+
+
+# ---------------------------------------------------------------------- unique
+
+@given(
+    st.lists(st.integers(-50, 50), min_size=0, max_size=200),
+    st.integers(0, 64),
+)
+@settings(max_examples=50, deadline=None)
+def test_unique_matches_numpy(vals, extra_cap):
+    n = len(vals)
+    cap = n + extra_cap + 1
+    x = _pad(np.array(vals, np.int32), cap, fill=7)  # padding collides with real values
+    u = unique(jnp.asarray(x), n_valid=n)
+    ref_vals, ref_counts = np.unique(np.array(vals, np.int32), return_counts=True)
+    k = int(u.n_unique)
+    assert k == len(ref_vals)
+    np.testing.assert_array_equal(np.asarray(u.values)[:k], ref_vals)
+    np.testing.assert_array_equal(np.asarray(u.counts)[:k], ref_counts)
+
+
+def test_unique_weighted_sums():
+    x = jnp.asarray(np.array([3, 1, 3, 3, 1, 9], np.int32))
+    w = jnp.asarray(np.array([1, 2, 3, 4, 5, 6], np.int32))
+    u = unique(x, weights=w)
+    assert int(u.n_unique) == 3
+    np.testing.assert_array_equal(np.asarray(u.values)[:3], [1, 3, 9])
+    np.testing.assert_array_equal(np.asarray(u.weight_sums)[:3], [7, 8, 6])
+
+
+def test_unique_all_padding():
+    u = unique(jnp.zeros(16, jnp.int32), n_valid=0)
+    assert int(u.n_unique) == 0
+
+
+# ------------------------------------------------------------------- groupby
+
+@given(
+    st.lists(
+        st.tuples(st.integers(0, 8), st.integers(0, 8), st.integers(-100, 100)),
+        min_size=1,
+        max_size=150,
+    )
+)
+@settings(max_examples=50, deadline=None)
+def test_groupby_sum_max_matches_numpy(rows):
+    a = np.array([r[0] for r in rows], np.int32)
+    b = np.array([r[1] for r in rows], np.int32)
+    v = np.array([r[2] for r in rows], np.int32)
+    n = len(rows)
+    cap = n + 8
+    g = groupby_aggregate(
+        [jnp.asarray(_pad(a, cap)), jnp.asarray(_pad(b, cap))],
+        {"s": (jnp.asarray(_pad(v, cap, fill=1000)), "sum"),
+         "m": (jnp.asarray(_pad(v, cap, fill=1000)), "max"),
+         "lo": (jnp.asarray(_pad(v, cap, fill=1000)), "min")},
+        n_valid=n,
+    )
+    # numpy reference
+    keys = {}
+    for x, y, z in rows:
+        keys.setdefault((x, y), []).append(z)
+    ref = sorted(keys.items())
+    k = int(g.n_groups)
+    assert k == len(ref)
+    got_a = np.asarray(g.keys[0])[:k]
+    got_b = np.asarray(g.keys[1])[:k]
+    np.testing.assert_array_equal(got_a, [r[0][0] for r in ref])
+    np.testing.assert_array_equal(got_b, [r[0][1] for r in ref])
+    np.testing.assert_array_equal(np.asarray(g.aggs["count"])[:k], [len(r[1]) for r in ref])
+    np.testing.assert_array_equal(np.asarray(g.aggs["s"])[:k], [sum(r[1]) for r in ref])
+    np.testing.assert_array_equal(np.asarray(g.aggs["m"])[:k], [max(r[1]) for r in ref])
+    np.testing.assert_array_equal(np.asarray(g.aggs["lo"])[:k], [min(r[1]) for r in ref])
+
+
+def test_groupby_mean():
+    g = groupby_aggregate(
+        [jnp.asarray(np.array([1, 1, 2], np.int32))],
+        {"mu": (jnp.asarray(np.array([1.0, 3.0, 5.0], np.float32)), "mean")},
+    )
+    np.testing.assert_allclose(np.asarray(g.aggs["mu"])[:2], [2.0, 5.0])
+
+
+def test_groupby_rejects_unknown_agg():
+    with pytest.raises(ValueError):
+        groupby_aggregate([jnp.zeros(4, jnp.int32)], {"x": (jnp.zeros(4), "median")})
+
+
+# ------------------------------------------------------------------ factorize
+
+def test_factorize_roundtrip():
+    rng = np.random.default_rng(3)
+    x = rng.integers(0, 1000, 256).astype(np.int32)
+    u = unique(jnp.asarray(x))
+    ranks = factorize(jnp.asarray(x), u.values)
+    np.testing.assert_array_equal(np.asarray(u.values)[np.asarray(ranks)], x)
+
+
+def test_factorize_dtype_max():
+    m = np.iinfo(np.int32).max
+    x = np.array([5, m, 5, m], np.int32)
+    u = unique(jnp.asarray(x))
+    ranks = np.asarray(factorize(jnp.asarray(x), u.values))
+    np.testing.assert_array_equal(ranks, [0, 1, 0, 1])
+
+
+# --------------------------------------------------------------- permutations
+
+@pytest.mark.parametrize("maker", ["shuffle", "hash"])
+@pytest.mark.parametrize("n,cap", [(0, 8), (1, 8), (7, 8), (8, 8), (100, 128)])
+def test_permutations_are_bijections(maker, n, cap):
+    if maker == "shuffle":
+        perm = random_permutation(jax.random.key(42), cap, n)
+    else:
+        perm = hash_permutation(cap, n)
+    live = np.asarray(perm)[:n]
+    assert sorted(live.tolist()) == list(range(n))
+
+
+def test_shuffle_differs_between_keys():
+    p1 = np.asarray(random_permutation(jax.random.key(0), 128, 100))[:100]
+    p2 = np.asarray(random_permutation(jax.random.key(1), 128, 100))[:100]
+    assert (p1 != p2).any()
+
+
+def test_hash_permutation_deterministic():
+    p1 = np.asarray(hash_permutation(128, 100))
+    p2 = np.asarray(hash_permutation(128, 100))
+    np.testing.assert_array_equal(p1, p2)
+    assert (np.asarray(hash_permutation(128, 100, salt=1)) != p1).any()

@@ -1,0 +1,146 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_attention, flash_attention_pallas
+from repro.kernels.histogram import histogram_pallas
+from repro.kernels.ref import ref_attention, ref_histogram, ref_segment_matmul
+from repro.kernels.segment_matmul import segment_matmul_pallas
+
+RNG = np.random.default_rng(0)
+
+
+# ------------------------------------------------------------------ histogram
+
+@pytest.mark.parametrize("n", [1, 100, 1024, 5000])
+@pytest.mark.parametrize("num_bins", [1, 7, 512, 1000])
+@pytest.mark.parametrize("dtype", [np.float32, np.int32])
+def test_histogram_sweep(n, num_bins, dtype):
+    ids = RNG.integers(-2, num_bins + 2, n).astype(np.int32)  # incl. out-of-range
+    w = (RNG.integers(1, 10, n) if dtype == np.int32 else RNG.random(n)).astype(dtype)
+    got = histogram_pallas(jnp.asarray(ids), num_bins, jnp.asarray(w), interpret=True)
+    want = ref_histogram(jnp.asarray(ids), num_bins, jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_histogram_unweighted():
+    ids = RNG.integers(0, 50, 777).astype(np.int32)
+    got = histogram_pallas(jnp.asarray(ids), 50, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.bincount(ids, minlength=50))
+
+
+@given(st.lists(st.integers(0, 31), min_size=1, max_size=300))
+@settings(max_examples=20, deadline=None)
+def test_histogram_property(ids):
+    ids = np.array(ids, np.int32)
+    got = histogram_pallas(jnp.asarray(ids), 32, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.bincount(ids, minlength=32))
+
+
+@pytest.mark.parametrize("block_rows,block_bins", [(256, 128), (1024, 512), (128, 1024)])
+def test_histogram_block_shapes(block_rows, block_bins):
+    ids = RNG.integers(0, 900, 3000).astype(np.int32)
+    got = histogram_pallas(
+        jnp.asarray(ids), 900, block_rows=block_rows, block_bins=block_bins, interpret=True
+    )
+    np.testing.assert_allclose(np.asarray(got), np.bincount(ids, minlength=900))
+
+
+# -------------------------------------------------------------- segment matmul
+
+@pytest.mark.parametrize("n,d,s", [(1, 1, 1), (100, 64, 10), (3000, 96, 500), (512, 200, 512)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_segment_matmul_sweep(n, d, s, dtype):
+    x = RNG.standard_normal((n, d)).astype(dtype)
+    seg = RNG.integers(0, s, n).astype(np.int32)
+    got = segment_matmul_pallas(jnp.asarray(x), jnp.asarray(seg), s, interpret=True)
+    want = ref_segment_matmul(jnp.asarray(x).astype(jnp.float32), jnp.asarray(seg), s)
+    tol = 1e-4 if dtype == np.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+def test_segment_matmul_out_of_range_dropped():
+    x = np.ones((8, 4), np.float32)
+    seg = np.array([0, 1, 2, 3, -1, 99, 0, 1], np.int32)
+    got = segment_matmul_pallas(jnp.asarray(x), jnp.asarray(seg), 4, interpret=True)
+    np.testing.assert_allclose(np.asarray(got).sum(), 6 * 4)
+
+
+# ------------------------------------------------------------- flash attention
+
+@pytest.mark.parametrize(
+    "b,hq,hkv,lq,lkv,d",
+    [
+        (1, 1, 1, 128, 128, 64),     # MHA square
+        (2, 8, 2, 256, 256, 64),     # GQA 4:1
+        (1, 4, 4, 96, 96, 128),      # non-multiple of block
+        (2, 8, 1, 1, 512, 64),       # decode: single query vs KV cache (MQA)
+        (1, 2, 2, 64, 320, 32),      # chunked prefill: lq < lkv
+    ],
+)
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_shapes(b, hq, hkv, lq, lkv, d, causal):
+    q = RNG.standard_normal((b, hq, lq, d)).astype(np.float32)
+    k = RNG.standard_normal((b, hkv, lkv, d)).astype(np.float32)
+    v = RNG.standard_normal((b, hkv, lkv, d)).astype(np.float32)
+    got = flash_attention_pallas(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), causal=causal, interpret=True
+    )
+    want = ref_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("window", [1, 64, 200, 4096])
+def test_flash_attention_sliding_window(window):
+    q = RNG.standard_normal((1, 2, 256, 64)).astype(np.float32)
+    k = RNG.standard_normal((1, 2, 256, 64)).astype(np.float32)
+    v = RNG.standard_normal((1, 2, 256, 64)).astype(np.float32)
+    got = flash_attention_pallas(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), window=window, interpret=True
+    )
+    want = ref_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-3), (jnp.bfloat16, 3e-2)])
+def test_flash_attention_dtypes(dtype, tol):
+    q = jnp.asarray(RNG.standard_normal((1, 4, 128, 64)), dtype)
+    k = jnp.asarray(RNG.standard_normal((1, 2, 128, 64)), dtype)
+    v = jnp.asarray(RNG.standard_normal((1, 2, 128, 64)), dtype)
+    got = flash_attention_pallas(q, k, v, interpret=True).astype(jnp.float32)
+    want = ref_attention(q, k, v).astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+def test_flash_attention_block_sizes():
+    q = RNG.standard_normal((1, 2, 200, 64)).astype(np.float32)
+    k = RNG.standard_normal((1, 2, 200, 64)).astype(np.float32)
+    v = RNG.standard_normal((1, 2, 200, 64)).astype(np.float32)
+    for bq, bk in [(64, 64), (128, 256), (32, 128)]:
+        got = flash_attention_pallas(
+            jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+            block_q=bq, block_k=bk, interpret=True,
+        )
+        want = ref_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_grad_matches_ref():
+    """custom_vjp backward == jnp attention VJP."""
+    q = jnp.asarray(RNG.standard_normal((1, 2, 64, 32)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((1, 2, 64, 32)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((1, 2, 64, 32)), jnp.float32)
+
+    def loss_kernel(q, k, v):
+        return jnp.sum(flash_attention(q, k, v, True, None, None, True) ** 2)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(ref_attention(q, k, v, causal=True) ** 2)
+
+    g1 = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-3)

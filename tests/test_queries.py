@@ -1,0 +1,114 @@
+"""End-to-end tests: challenge queries + anonymization vs the NumPy oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Table, anonymize, run_all_queries, traffic_matrix
+from repro.core import queries as Q
+from repro.core.ref import (
+    ref_anonymize_check,
+    ref_run_all_queries,
+    ref_traffic_matrix,
+)
+
+
+def make_table(src, dst, w=None, extra_cap=17):
+    n = len(src)
+    cap = n + extra_cap
+    pad = lambda x: np.concatenate([np.asarray(x), np.full(cap - n, 99999, np.int32)])
+    cols = {"src": pad(src), "dst": pad(dst)}
+    if w is not None:
+        cols["n_packets"] = pad(w)
+    return Table.from_dict(cols, n_valid=n)
+
+
+edges = st.lists(
+    st.tuples(st.integers(0, 30), st.integers(0, 30)), min_size=1, max_size=300
+)
+
+
+@given(edges)
+@settings(max_examples=40, deadline=None)
+def test_all_queries_match_oracle(pairs):
+    src = np.array([p[0] for p in pairs], np.int32)
+    dst = np.array([p[1] for p in pairs], np.int32)
+    res = jax.jit(run_all_queries)(make_table(src, dst))
+    ref = ref_run_all_queries(src, dst)
+    for k, v in ref.items():
+        assert int(getattr(res, k)) == v, k
+
+
+@given(edges, st.lists(st.integers(1, 20), min_size=300, max_size=300))
+@settings(max_examples=25, deadline=None)
+def test_weighted_queries_match_oracle(pairs, weights):
+    src = np.array([p[0] for p in pairs], np.int32)
+    dst = np.array([p[1] for p in pairs], np.int32)
+    w = np.array(weights[: len(pairs)], np.int32)
+    res = jax.jit(run_all_queries)(make_table(src, dst, w))
+    ref = ref_run_all_queries(src, dst, w)
+    for k, v in ref.items():
+        assert int(getattr(res, k)) == v, k
+
+
+def test_traffic_matrix_edge_list():
+    src = np.array([2, 1, 2, 2], np.int32)
+    dst = np.array([7, 7, 7, 3], np.int32)
+    g = traffic_matrix(make_table(src, dst))
+    k = int(g.n_groups)
+    rs, rd, rp = ref_traffic_matrix(src, dst)
+    np.testing.assert_array_equal(np.asarray(g.keys[0])[:k], rs)
+    np.testing.assert_array_equal(np.asarray(g.keys[1])[:k], rd)
+    np.testing.assert_array_equal(np.asarray(g.aggs["packets"])[:k], rp)
+
+
+def test_individual_query_functions():
+    src = np.array([1, 1, 2, 3, 1], np.int32)
+    dst = np.array([9, 9, 9, 8, 7], np.int32)
+    t = make_table(src, dst)
+    assert int(Q.valid_packets(t)) == 5
+    assert int(Q.unique_links(t)) == 4
+    assert int(Q.max_link_packets(t)) == 2
+    assert int(Q.unique_sources(t).n_unique) == 3
+    assert int(Q.unique_destinations(t).n_unique) == 3
+    assert int(Q.unique_ips(t).n_unique) == 6
+    assert int(Q.max_source_packets(t)) == 3
+    assert int(Q.max_source_fanout(t)) == 2  # src 1 -> {9, 7}
+    assert int(Q.max_destination_packets(t)) == 3
+    assert int(Q.max_destination_fanin(t)) == 2  # dst 9 <- {1, 2}
+
+
+@pytest.mark.parametrize("method,rounds", [("shuffle", 1), ("shuffle", 2), ("hash", 1), ("hash", 3)])
+def test_anonymize_is_isomorphism(method, rounds):
+    rng = np.random.default_rng(7)
+    src = rng.integers(0, 40, 500).astype(np.int32)
+    dst = rng.integers(20, 60, 500).astype(np.int32)
+    t = make_table(src, dst)
+    key = jax.random.key(5) if method == "shuffle" else None
+    res = anonymize(t, key, method=method, rounds=rounds)
+    n = 500
+    a_src = np.asarray(res.table["src"])[:n]
+    a_dst = np.asarray(res.table["dst"])[:n]
+    assert ref_anonymize_check(src, dst, a_src, a_dst)
+
+
+def test_anonymize_preserves_query_results():
+    """Challenge invariant: every Table III statistic is anonymization-invariant."""
+    rng = np.random.default_rng(11)
+    src = rng.integers(0, 64, 800).astype(np.int32)
+    dst = rng.integers(0, 64, 800).astype(np.int32)
+    t = make_table(src, dst)
+    res0 = jax.jit(run_all_queries)(t)
+    anon = anonymize(t, jax.random.key(0))
+    res1 = jax.jit(run_all_queries)(anon.table)
+    for k, v in res0.as_dict().items():
+        assert int(getattr(res1, k)) == int(v), k
+
+
+def test_anonymize_shuffle_actually_moves_ids():
+    src = np.arange(100, dtype=np.int32)
+    dst = np.arange(100, 200, dtype=np.int32)
+    t = make_table(src, dst)
+    res = anonymize(t, jax.random.key(3))
+    assert (np.asarray(res.table["src"])[:100] != src).any()

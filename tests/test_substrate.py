@@ -1,0 +1,197 @@
+"""Substrate tests: checkpoint atomicity/resume, optimizer, schedules, data
+formats, sampler, elastic resharding."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.pcaplite import parse_fast, parse_python, write_pcaplite
+from repro.data.plq import plq_info, read_plq, read_plq_chunks, write_plq
+from repro.data.rmat import rmat_edges, synthetic_packets
+from repro.data.sampler import build_csr, sample_subgraph
+from repro.train.checkpoint import (gc_checkpoints, latest_step,
+                                    restore_checkpoint, restore_latest,
+                                    save_checkpoint)
+from repro.train.optimizer import (AdamWConfig, adamw_init, adamw_update,
+                                   cosine_schedule, wsd_schedule)
+
+
+# ------------------------------------------------------------------ formats
+
+def test_plq_roundtrip_and_chunks(tmp_path):
+    cols = synthetic_packets(10_000, scale=12, seed=0)
+    p = str(tmp_path / "x.plq")
+    write_plq(p, cols, row_group_size=3_000)
+    info = plq_info(p)
+    assert info["n_rows"] == 10_000 and len(info["groups"]) == 4
+    back = read_plq(p)
+    for k, v in cols.items():
+        np.testing.assert_array_equal(back[k], v)
+    total = sum(len(c["src"]) for c in read_plq_chunks(p, ["src"]))
+    assert total == 10_000
+
+
+def test_plq_rejects_garbage(tmp_path):
+    p = str(tmp_path / "bad.plq")
+    with open(p, "wb") as f:
+        f.write(b"not a plq file at all........")
+    with pytest.raises(ValueError):
+        plq_info(p)
+
+
+def test_pcaplite_parsers_agree(tmp_path):
+    cols = synthetic_packets(2_000, scale=10, seed=1)
+    p = str(tmp_path / "x.pcpl")
+    write_pcaplite(p, cols)
+    fast = parse_fast(p)
+    slow = parse_python(p)
+    for k in ("ts", "src", "dst", "length"):
+        np.testing.assert_array_equal(fast[k], slow[k])
+        np.testing.assert_array_equal(fast[k], cols[k])
+
+
+def test_rmat_is_power_law():
+    src, _ = rmat_edges(14, 100_000, seed=0)
+    counts = np.bincount(src)
+    counts = counts[counts > 0]
+    # hypersparse: the top 1% of sources should own >15% of the packets
+    top = np.sort(counts)[::-1]
+    assert top[: max(len(top) // 100, 1)].sum() > 0.15 * counts.sum()
+
+
+# ----------------------------------------------------------------- sampler
+
+def test_sampler_shapes_and_locality():
+    s, r = rmat_edges(10, 8_000, seed=2)
+    csr = build_csr(s.astype(np.int64), r.astype(np.int64), 1024)
+    feats = np.random.default_rng(0).standard_normal((1024, 6)).astype(np.float32)
+    labels = np.random.default_rng(1).integers(0, 3, 1024)
+    sub = sample_subgraph(csr, np.arange(64), [4, 3], feats, labels, seed=5)
+    cap_nodes = 64 + 256 + 768
+    assert sub["nodes"].shape == (cap_nodes, 6)
+    assert sub["senders"].shape == (64 * 4 + 256 * 3,)
+    n_local = int(sub["n_local"])
+    live = sub["senders"] < cap_nodes
+    assert (sub["senders"][live] < n_local).all()
+    # features of local nodes must match the global feature rows
+    assert (np.abs(sub["nodes"][:n_local]).sum(1) > 0).any()
+
+
+def test_sampler_deterministic():
+    s, r = rmat_edges(10, 8_000, seed=2)
+    csr = build_csr(s.astype(np.int64), r.astype(np.int64), 1024)
+    feats = np.zeros((1024, 4), np.float32)
+    labels = np.zeros(1024, np.int64)
+    a = sample_subgraph(csr, np.arange(32), [5], feats, labels, seed=7)
+    b = sample_subgraph(csr, np.arange(32), [5], feats, labels, seed=7)
+    np.testing.assert_array_equal(a["senders"], b["senders"])
+
+
+# -------------------------------------------------------------- checkpoints
+
+def _tree():
+    return {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.int32)}}
+
+
+def test_checkpoint_roundtrip_and_latest(tmp_path):
+    d = str(tmp_path)
+    t = _tree()
+    save_checkpoint(d, 10, t, extra={"k": 1})
+    save_checkpoint(d, 20, t)
+    assert latest_step(d) == 20
+    step, tree, extra = restore_latest(d, t)
+    assert step == 20
+    np.testing.assert_array_equal(np.asarray(tree["a"]), np.asarray(t["a"]))
+
+
+def test_checkpoint_crash_safety(tmp_path):
+    """A torn tmp dir must be invisible; LATEST ahead of commit falls back."""
+    d = str(tmp_path)
+    t = _tree()
+    save_checkpoint(d, 10, t)
+    os.makedirs(os.path.join(d, "step_00000030.tmp"))  # simulated crash
+    with open(os.path.join(d, "LATEST"), "w") as f:
+        f.write("30")  # LATEST points at a step that never committed
+    assert latest_step(d) == 10
+    step, _, _ = restore_latest(d, t)
+    assert step == 10
+
+
+def test_checkpoint_gc_keeps_last_k(tmp_path):
+    d = str(tmp_path)
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(d, s, t, keep=2)
+    steps = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+    assert len(steps) == 2 and steps[-1].endswith("5".zfill(8))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _tree())
+    bad = {"a": jnp.zeros((2, 2)), "b": {"c": jnp.ones((5,), jnp.int32)}}
+    with pytest.raises(ValueError):
+        restore_checkpoint(d, 1, bad)
+
+
+# ---------------------------------------------------------------- optimizer
+
+def test_adamw_decreases_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                      total_steps=100, schedule="constant")
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = adamw_init(params)
+    for _ in range(50):
+        grads = {"w": 2 * params["w"]}
+        params, state, m = adamw_update(grads, state, params, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+
+
+@given(st.integers(0, 9_999))
+@settings(max_examples=30, deadline=None)
+def test_schedules_bounded(step):
+    cfg = AdamWConfig(lr=1e-3, warmup_steps=100, total_steps=10_000)
+    for f in (cosine_schedule(cfg), wsd_schedule(cfg)):
+        lr = float(f(jnp.asarray(step)))
+        assert 0.0 <= lr <= cfg.lr * (1 + 1e-6)
+
+
+def test_wsd_has_plateau():
+    cfg = AdamWConfig(lr=1e-3, warmup_steps=100, total_steps=1_000,
+                      decay_fraction=0.2, schedule="wsd")
+    f = wsd_schedule(cfg)
+    plateau = [float(f(jnp.asarray(s))) for s in (200, 400, 700)]
+    assert all(abs(p - 1e-3) < 1e-9 for p in plateau)
+    assert float(f(jnp.asarray(999))) < 2e-4  # decayed ~10x
+
+
+# ----------------------------------------------------------------- elastic
+
+def test_reshard_tree_between_meshes():
+    from jax.sharding import PartitionSpec as P
+    from repro.train.elastic import reshard_tree
+
+    mesh1 = jax.make_mesh((1,), ("data",))
+    tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+    out = reshard_tree(tree, mesh1, P())
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(tree["w"]))
+
+
+def test_straggler_watchdog_flags_slow_steps():
+    import time
+
+    from repro.train.elastic import StragglerWatchdog
+
+    wd = StragglerWatchdog(window=20, threshold=2.0)
+    for _ in range(10):
+        wd.start()
+        time.sleep(0.002)
+        wd.stop()
+    wd.start()
+    time.sleep(0.05)
+    assert wd.stop() is True
+    assert wd.flagged == 1
