@@ -18,6 +18,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core.table import Table
 from repro.core.queries import run_all_queries
 from repro.core.ref import ref_run_all_queries
+from repro.compat import shard_map
 from repro.dist import distributed_queries
 
 n = 1 << 21
@@ -31,7 +32,7 @@ f1(t); jax.block_until_ready(f1(t))
 t0 = time.perf_counter(); jax.block_until_ready(f1(t)); t_single = time.perf_counter() - t0
 
 mesh = jax.make_mesh((8,), ("rows",))
-f8 = jax.jit(jax.shard_map(
+f8 = jax.jit(shard_map(
     lambda s, d: distributed_queries(Table.from_dict({"src": s, "dst": d}), "rows"),
     mesh=mesh, in_specs=(P("rows"), P("rows")), out_specs=P()))
 out = f8(src, dst); jax.block_until_ready(out)

@@ -7,6 +7,7 @@ Emits ``name,us_per_call,derived`` CSV rows:
   anonymize/*    paper §IV        (shuffle vs HashGraph-style vs numpy)
   kernel/*       beyond-paper     (kernel-path dispatch)
   distributed/*  beyond-paper     (shard_map pipeline at 8 shards)
+  endtoend/*     paper pipeline   (per-phase + fused full-workload throughput)
 
 ``python -m benchmarks.run [--quick] [--n N] [--only PREFIX]``
 """
@@ -25,8 +26,8 @@ def main() -> None:
     args = ap.parse_args()
     n = (1 << 17) if args.quick else args.n
 
-    from . import (bench_anonymize, bench_distributed, bench_graphblas,
-                   bench_io, bench_kernels, bench_queries)
+    from . import (bench_anonymize, bench_distributed, bench_endtoend,
+                   bench_graphblas, bench_io, bench_kernels, bench_queries)
 
     sections = [
         ("io", lambda: bench_io.run(n=n)),
@@ -35,6 +36,7 @@ def main() -> None:
         ("anonymize", lambda: bench_anonymize.run(n=n)),
         ("kernel", bench_kernels.run),
         ("distributed", bench_distributed.run),
+        ("endtoend", lambda: bench_endtoend.run(n=n)),
     ]
     print("name,us_per_call,derived")
     failed = 0

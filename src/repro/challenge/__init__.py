@@ -1,0 +1,27 @@
+"""repro.challenge — the end-to-end Anonymized Network Sensing workload.
+
+Runs the full paper pipeline (read -> build -> anonymize -> analyze) as
+timed phases over one static-shape table, with an optional single-program
+fused path and a shard_map scalar path.  CLI:
+
+    PYTHONPATH=src python -m repro.challenge.run --scale 14
+"""
+from .pipeline import (
+    ChallengeConfig,
+    ChallengePhaseTimings,
+    ChallengeResults,
+    ChallengeRun,
+    analyze,
+    cross_window_ip_overlap,
+    run_challenge,
+)
+
+__all__ = [
+    "ChallengeConfig",
+    "ChallengePhaseTimings",
+    "ChallengeResults",
+    "ChallengeRun",
+    "analyze",
+    "cross_window_ip_overlap",
+    "run_challenge",
+]

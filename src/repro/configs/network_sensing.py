@@ -20,6 +20,7 @@ from jax.sharding import PartitionSpec as P
 
 from ..core.table import Table
 from ..dist.relational import distributed_queries
+from ..compat import shard_map
 from .common import ArchSpec, Cell, MeshAxes
 
 ARCH_ID = "network-sensing"
@@ -44,7 +45,7 @@ def build_cell(shape: str, mp: MeshAxes) -> Optional[Cell]:
         t = Table.from_dict({"src": src, "dst": dst, "n_packets": w})
         return distributed_queries(t, axis_names)
 
-    step = jax.shard_map(
+    step = shard_map(
         queries_fn, mesh=mp.mesh,
         in_specs=(col_spec, col_spec, col_spec),
         out_specs=P(),

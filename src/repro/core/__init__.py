@@ -14,14 +14,17 @@ from .ops import (
     factorize,
     groupby_aggregate,
     hash_permutation,
+    isin,
     mix32,
     multi_key_sort,
     random_permutation,
     segment_ids_from_sorted,
+    semi_join,
+    top_k,
     unique,
     value_counts,
 )
-from .queries import QueryResults, run_all_queries, traffic_matrix
+from .queries import QueryResults, TopLinks, run_all_queries, top_links, traffic_matrix
 from .anonymize import AnonymizationResult, anonymize
 from .temporal import window_ids, windowed_queries
 
@@ -33,14 +36,19 @@ __all__ = [
     "factorize",
     "groupby_aggregate",
     "hash_permutation",
+    "isin",
     "mix32",
     "multi_key_sort",
     "random_permutation",
     "segment_ids_from_sorted",
+    "semi_join",
+    "top_k",
     "unique",
     "value_counts",
     "QueryResults",
+    "TopLinks",
     "run_all_queries",
+    "top_links",
     "traffic_matrix",
     "AnonymizationResult",
     "anonymize",

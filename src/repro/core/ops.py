@@ -36,6 +36,9 @@ __all__ = [
     "value_counts",
     "drop_duplicates",
     "factorize",
+    "isin",
+    "semi_join",
+    "top_k",
     "mix32",
     "random_permutation",
     "hash_permutation",
@@ -292,6 +295,112 @@ def factorize(
     occurrence — see tests/test_core_ops.py::test_factorize_dtype_max.
     """
     return jnp.searchsorted(sorted_uniques, x, side="left").astype(jnp.int32)
+
+
+# -----------------------------------------------------------------------------
+# Membership / semi-join / top-k (the end-to-end pipeline's extra vocabulary)
+# -----------------------------------------------------------------------------
+
+def isin(
+    x: jnp.ndarray,
+    sorted_uniques: jnp.ndarray,
+    n_uniques: jnp.ndarray,
+    n_valid: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """``df[col].isin(values)`` — single-key set membership.
+
+    cuDF probes a hash table; with ``sorted_uniques`` already the tail-padded
+    ascending output of :func:`unique`, the static-shape equivalent is one
+    binary search per element (cheaper than re-hashing — the build cost was
+    paid by the sort that produced the uniques).  Returns a (capacity,) bool
+    mask, False on padding rows.
+    """
+    cap = x.shape[0]
+    n_valid = jnp.asarray(cap if n_valid is None else n_valid, jnp.int32)
+    pos = jnp.searchsorted(sorted_uniques, x, side="left").astype(jnp.int32)
+    safe = jnp.minimum(pos, sorted_uniques.shape[0] - 1)
+    hit = (pos < jnp.asarray(n_uniques, jnp.int32)) & (sorted_uniques[safe] == x)
+    return hit & (jnp.arange(cap, dtype=jnp.int32) < n_valid)
+
+
+def semi_join(
+    left_keys: Sequence[jnp.ndarray],
+    right_keys: Sequence[jnp.ndarray],
+    left_n_valid: Optional[jnp.ndarray] = None,
+    right_n_valid: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Multi-key semi-join membership: does left row i appear in right?
+
+    The ETL op is ``df.merge(other, how="leftsemi")`` / hash-based
+    set-membership; the static-shape formulation is the engine's usual
+    sort-merge (DESIGN.md §2): concatenate both sides with a side flag,
+    stable-sort by the keys, and mark every equal-key *run* that contains at
+    least one right row.  One sort of ``L + R`` rows, no hash table.
+
+    Returns a (left_capacity,) bool mask (False on left padding rows).
+    """
+    left_keys = [jnp.asarray(k) for k in left_keys]
+    right_keys = [jnp.asarray(k) for k in right_keys]
+    lcap = left_keys[0].shape[0]
+    rcap = right_keys[0].shape[0]
+    l_nv = jnp.asarray(lcap if left_n_valid is None else left_n_valid, jnp.int32)
+    r_nv = jnp.asarray(rcap if right_n_valid is None else right_n_valid, jnp.int32)
+
+    both = [jnp.concatenate([l, r]) for l, r in zip(left_keys, right_keys)]
+    is_left = jnp.concatenate(
+        [jnp.ones((lcap,), jnp.int32), jnp.zeros((rcap,), jnp.int32)]
+    )
+    idx = jnp.concatenate(
+        [jnp.arange(lcap, dtype=jnp.int32), jnp.full((rcap,), lcap, jnp.int32)]
+    )
+    pos = jnp.arange(lcap + rcap, dtype=jnp.int32)
+    valid = jnp.where(pos < lcap, pos < l_nv, pos - lcap < r_nv)
+
+    skeys_and_side, (s_idx,) = multi_key_sort(
+        [*both, is_left], [idx], valid_mask=valid
+    )
+    *skeys, s_is_left = skeys_and_side
+    n_total = l_nv + r_nv
+    seg, _, _ = segment_ids_from_sorted(list(skeys), n_total)
+    # a run is "hit" iff it contains a right row (side flag 0 -> min == 0)
+    run_min_side = jax.ops.segment_min(
+        jnp.where(pos < n_total, s_is_left, 1), seg,
+        num_segments=lcap + rcap + 1,
+    )
+    member = (run_min_side[seg] == 0) & (s_is_left == 1) & (pos < n_total)
+    out = jnp.zeros((lcap + 1,), jnp.bool_)
+    out = out.at[jnp.where(member, s_idx, lcap)].set(member)
+    return out[:lcap]
+
+
+def top_k(
+    values: jnp.ndarray,
+    k: int,
+    valid_mask: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Largest ``k`` live entries of ``values``: ``(vals, indices, n_live)``.
+
+    ``df.nlargest(k)`` over a tail-padded column.  Ties break toward the
+    lowest index (= lexicographically first group when ``values`` is a
+    GroupResult aggregate, since group keys are emitted sorted).  Slots past
+    ``n_live = min(k, #valid)`` hold the dtype min and index 0.  ``k`` is
+    clamped to the buffer capacity (lax.top_k rejects k > len).
+    """
+    k = min(k, values.shape[0])
+    masked = values if valid_mask is None else jnp.where(
+        valid_mask, values, _min_ident(values.dtype)
+    )
+    vals, idx = lax.top_k(masked, k)
+    n_live = jnp.asarray(
+        values.shape[0] if valid_mask is None else jnp.sum(valid_mask), jnp.int32
+    )
+    n_live = jnp.minimum(n_live, k)
+    keep = jnp.arange(k, dtype=jnp.int32) < n_live
+    return (
+        jnp.where(keep, vals, _min_ident(values.dtype)),
+        jnp.where(keep, idx, 0).astype(jnp.int32),
+        n_live,
+    )
 
 
 # -----------------------------------------------------------------------------

@@ -19,10 +19,12 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from .ops import GroupResult, UniqueResult, groupby_aggregate, unique
+from .ops import GroupResult, UniqueResult, groupby_aggregate, top_k, unique
 from .table import Table
 
 __all__ = [
+    "TopLinks",
+    "top_links",
     "packet_weights",
     "traffic_matrix",
     "valid_packets",
@@ -139,6 +141,42 @@ def max_source_fanout(t: Table) -> jnp.ndarray:
     """max(|A_t|_0 1)  ==  df[['src']].value_counts().max() over links."""
     g = source_fanout(t)
     return jnp.max(jnp.where(g.mask(), g.aggs["count"], 0))
+
+
+# --- heavy-hitter links (end-to-end pipeline report) --------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TopLinks:
+    """The k heaviest (src, dst) links; slots past ``n_valid`` are padding."""
+
+    src: jnp.ndarray
+    dst: jnp.ndarray
+    packets: jnp.ndarray
+    n_valid: jnp.ndarray  # scalar int32 == min(k, unique_links)
+
+
+jax.tree_util.register_dataclass(
+    TopLinks, data_fields=["src", "dst", "packets", "n_valid"], meta_fields=[]
+)
+
+
+def top_links(t: Table, k: int) -> TopLinks:
+    """``df.groupby(['src','dst']).size().nlargest(k)`` — heaviest links.
+
+    Ties break toward the lexicographically smallest (src, dst) because the
+    traffic-matrix group keys are emitted sorted and ``top_k`` prefers the
+    lowest index.
+    """
+    g = traffic_matrix(t)
+    k = min(k, t.capacity)  # top_k clamps identically; keep shapes in step
+    pk, idx, n_live = top_k(g.aggs["packets"], k, g.mask())
+    keep = jnp.arange(k, dtype=jnp.int32) < n_live
+    return TopLinks(
+        src=jnp.where(keep, g.keys[0][idx], 0),
+        dst=jnp.where(keep, g.keys[1][idx], 0),
+        packets=jnp.where(keep, pk, 0),
+        n_valid=n_live,
+    )
 
 
 # --- destination-side mirrors -------------------------------------------------

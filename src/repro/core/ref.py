@@ -17,6 +17,11 @@ __all__ = [
     "ref_traffic_matrix",
     "ref_run_all_queries",
     "ref_anonymize_check",
+    "ref_isin",
+    "ref_semi_join",
+    "ref_top_links",
+    "ref_windowed_histogram",
+    "ref_window_ip_overlap",
 ]
 
 
@@ -71,6 +76,55 @@ def ref_run_all_queries(src, dst, n_packets=None) -> Dict[str, int]:
         "max_destination_packets": _max_groupsum(dst, w),
         "max_destination_fanin": _maxcount(ld),
     }
+
+
+def ref_isin(x, values) -> np.ndarray:
+    """Oracle for ops.isin: plain ``np.isin``."""
+    return np.isin(np.asarray(x), np.asarray(values))
+
+
+def ref_semi_join(left_cols, right_cols) -> np.ndarray:
+    """Oracle for ops.semi_join: tuple-set membership of left rows in right."""
+    right = set(zip(*(np.asarray(c).tolist() for c in right_cols)))
+    return np.array(
+        [row in right for row in zip(*(np.asarray(c).tolist() for c in left_cols))],
+        bool,
+    )
+
+
+def ref_top_links(src, dst, k, n_packets=None):
+    """Oracle for queries.top_links: k heaviest links, ties by (src, dst) asc."""
+    ls, ld, lp = ref_traffic_matrix(src, dst, n_packets)
+    order = np.lexsort((ld, ls, -lp))[:k]
+    return ls[order], ld[order], lp[order]
+
+
+def ref_windowed_histogram(win, ids, n_windows, num_bins, weights=None) -> np.ndarray:
+    """Oracle for kernels.ops.windowed_histogram: 2-D bincount."""
+    win = np.asarray(win)
+    ids = np.asarray(ids)
+    w = np.ones(len(ids), np.float64) if weights is None else np.asarray(weights, np.float64)
+    out = np.zeros((n_windows, num_bins), np.float64)
+    ok = (win >= 0) & (win < n_windows) & (ids >= 0) & (ids < num_bins)
+    np.add.at(out, (win[ok], ids[ok]), w[ok])
+    return out
+
+
+def ref_window_ip_overlap(src, dst, win, n_windows) -> np.ndarray:
+    """Oracle for challenge.cross_window_ip_overlap.
+
+    overlap[w] = |distinct IPs (src ∪ dst) active in window w AND in w-1|;
+    overlap[0] = 0.
+    """
+    win = np.asarray(win)
+    per_window = [
+        set(np.concatenate([np.asarray(src)[win == w], np.asarray(dst)[win == w]]).tolist())
+        for w in range(n_windows)
+    ]
+    out = np.zeros(n_windows, np.int64)
+    for w in range(1, n_windows):
+        out[w] = len(per_window[w] & per_window[w - 1])
+    return out
 
 
 def ref_anonymize_check(orig_src, orig_dst, anon_src, anon_dst) -> bool:

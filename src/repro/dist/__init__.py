@@ -1,0 +1,22 @@
+"""repro.dist — the paper's pipeline under shard_map (DESIGN.md §5).
+
+Static-shape distributed relational ops: a hash-partition ``all_to_all``
+exchange with fixed per-peer buckets and explicit overflow accounting
+(exchange.py), the exact sharded Table III query suite (relational.py), a
+globally-consistent sharded anonymizer (anonymize.py), and compressed psum
+variants for the DCN pod axis (compress.py).
+"""
+from .anonymize import distributed_anonymize
+from .compress import psum_bf16, psum_int8
+from .exchange import exchange_by_owner, return_to_sender
+from .relational import distributed_queries, distributed_unique_count
+
+__all__ = [
+    "distributed_anonymize",
+    "psum_bf16",
+    "psum_int8",
+    "exchange_by_owner",
+    "return_to_sender",
+    "distributed_queries",
+    "distributed_unique_count",
+]

@@ -1,0 +1,38 @@
+"""Compressed cross-shard reductions for the DCN-riding pod axis.
+
+The multi-pod mesh (launch/mesh.py) crosses data-center network once per
+step; these psum variants trade precision for bytes on that axis:
+
+  * ``psum_bf16`` — 2x: truncate to bfloat16, reduce, upcast.
+  * ``psum_int8`` — 4x: symmetric linear quantization with a *global* scale
+    (pmax of local absmax) so quantized values add exactly; the local
+    quantization residual is returned for error-feedback accumulation
+    (add it to the next step's input to keep the bias bounded).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["psum_bf16", "psum_int8"]
+
+
+def psum_bf16(x: jnp.ndarray, axis_name) -> jnp.ndarray:
+    return lax.psum(x.astype(jnp.bfloat16), axis_name).astype(x.dtype)
+
+
+def psum_int8(
+    x: jnp.ndarray, axis_name
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """int8-quantized psum; returns ``(sum, local_residual)``.
+
+    The residual is bounded by one quantization step (global_absmax / 127).
+    """
+    absmax = lax.pmax(jnp.max(jnp.abs(x)), axis_name)
+    scale = jnp.maximum(absmax / 127.0, jnp.finfo(jnp.float32).tiny).astype(x.dtype)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    total = lax.psum(q.astype(jnp.int32), axis_name).astype(x.dtype) * scale
+    residual = x - q.astype(x.dtype) * scale
+    return total, residual

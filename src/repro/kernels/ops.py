@@ -26,7 +26,7 @@ from .flash_attention import flash_attention, flash_attention_pallas
 from .histogram import histogram_pallas
 from .segment_matmul import segment_matmul_pallas
 
-__all__ = ["histogram", "segment_reduce", "attention"]
+__all__ = ["histogram", "windowed_histogram", "segment_reduce", "attention"]
 
 # One-hot matmul beats scatter only while S is modest; see DESIGN.md §2 and
 # the §Perf napkin math (2·n·S flops vs ~12·n bytes of scatter traffic).
@@ -49,6 +49,35 @@ def histogram(
     return histogram_pallas(
         ids, num_bins, weights, interpret=(backend == "interpret")
     )
+
+
+def windowed_histogram(
+    win: jnp.ndarray,
+    ids: jnp.ndarray,
+    n_windows: int,
+    num_bins: int,
+    weights: Optional[jnp.ndarray] = None,
+    *,
+    backend: str = "auto",
+) -> jnp.ndarray:
+    """Per-temporal-window histograms in ONE kernel dispatch.
+
+    The challenge's multi-temporal analysis needs a histogram *per window*;
+    dispatching the kernel once per window serializes n_windows tiny grids.
+    Instead the (window, id) pair is fused into a single flattened bin space
+    ``win * num_bins + id`` so every window batches through one
+    ``histogram_pallas`` grid (the bin-tile axis simply grows n_windows-fold
+    — same VMEM budget per step, DESIGN.md §2/§6).
+
+    Rows with ``win`` or ``ids`` outside range are dropped (fused id -1).
+    Returns float32 counts of shape (n_windows, num_bins).
+    """
+    ok = (win >= 0) & (win < n_windows) & (ids >= 0) & (ids < num_bins)
+    fused = jnp.where(
+        ok, win.astype(jnp.int32) * num_bins + ids.astype(jnp.int32), -1
+    )
+    flat = histogram(fused, n_windows * num_bins, weights, backend=backend)
+    return flat.reshape(n_windows, num_bins)
 
 
 def segment_reduce(

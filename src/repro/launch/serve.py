@@ -65,11 +65,12 @@ def main():
     # ---- query phase (batched service) ----
     if args.distributed and len(jax.devices()) > 1:
         from jax.sharding import PartitionSpec as P
+        from ..compat import shard_map
         from ..dist.relational import distributed_queries
         from .mesh import make_analytics_mesh
 
         mesh = make_analytics_mesh()
-        qfn = jax.jit(jax.shard_map(
+        qfn = jax.jit(shard_map(
             lambda s, d: distributed_queries(
                 Table.from_dict({"src": s, "dst": d}), "rows"),
             mesh=mesh, in_specs=(P("rows"), P("rows")), out_specs=P(),

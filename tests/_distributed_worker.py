@@ -4,6 +4,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 from repro.core.ref import ref_run_all_queries
 from repro.core.table import Table
 from repro.dist import distributed_queries, distributed_unique_count
@@ -25,7 +27,7 @@ def check_queries_match_oracle():
         return distributed_queries(t, "rows")
 
     f = jax.jit(
-        jax.shard_map(fn, mesh=mesh, in_specs=(P("rows"),) * 3, out_specs=P())
+        shard_map(fn, mesh=mesh, in_specs=(P("rows"),) * 3, out_specs=P())
     )
     res = f(src, dst, w)
     assert int(res["overflow"]) == 0
@@ -46,7 +48,7 @@ def check_skewed_keys_still_exact():
         return distributed_queries(t, "rows", overflow_factor=4.0)
 
     f = jax.jit(
-        jax.shard_map(fn, mesh=mesh, in_specs=(P("rows"),) * 2, out_specs=P())
+        shard_map(fn, mesh=mesh, in_specs=(P("rows"),) * 2, out_specs=P())
     )
     res = f(src, dst)
     ref = ref_run_all_queries(src, dst)
@@ -67,7 +69,7 @@ def check_multi_pod_axes():
         return distributed_unique_count(x, ("pod", "rows"))
 
     f = jax.jit(
-        jax.shard_map(fn, mesh=mesh, in_specs=(P(("pod", "rows")),), out_specs=(P(), P()))
+        shard_map(fn, mesh=mesh, in_specs=(P(("pod", "rows")),), out_specs=(P(), P()))
     )
     cnt, ov = f(x)
     assert int(ov) == 0
@@ -86,7 +88,7 @@ def check_compression():
         return exact, b, q, res
 
     f = jax.jit(
-        jax.shard_map(
+        shard_map(
             fn,
             mesh=mesh,
             in_specs=(P("dp"),),
@@ -111,7 +113,7 @@ def check_distributed_anonymize():
     n = 8 * 2048
     src = rng.integers(0, 3000, n).astype(np.int32)
     dst = rng.integers(1000, 5000, n).astype(np.int32)
-    f = jax.jit(jax.shard_map(
+    f = jax.jit(shard_map(
         lambda s, d, k: distributed_anonymize(
             Table.from_dict({"src": s, "dst": d}), k, "rows"),
         mesh=mesh, in_specs=(P("rows"), P("rows"), P()),

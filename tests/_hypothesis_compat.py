@@ -1,0 +1,78 @@
+"""``hypothesis`` import shim — property tests degrade to seeded examples.
+
+``hypothesis`` is a *dev* extra (pyproject ``[dev]``), not a hard test
+dependency: when it is installed the real ``given``/``settings``/``st`` are
+re-exported unchanged; when it is missing this module provides a minimal
+deterministic fallback that draws a fixed number of pseudo-random examples
+per property (seeded by the test name, so failures reproduce).  Only the
+strategy combinators this suite uses are implemented: ``integers``,
+``lists``, ``tuples``.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # degraded fixed-example mode
+    import functools
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    # Fallback draws per property: enough to exercise shape edge cases while
+    # keeping the no-hypothesis suite fast (every distinct capacity re-jits).
+    _FALLBACK_MAX_EXAMPLES = 8
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: "random.Random"):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+            def draw(rng):
+                # bias toward the boundaries — they carry most of the bugs
+                n = rng.choice([min_size, max_size, rng.randint(min_size, max_size)])
+                return [elements.example(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*elements: _Strategy) -> _Strategy:
+            return _Strategy(lambda rng: tuple(e.example(rng) for e in elements))
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 20, **_ignored):
+        def deco(fn):
+            fn._fallback_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strategies: _Strategy):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper():
+                declared = getattr(fn, "_fallback_max_examples", 20)
+                rng = random.Random(fn.__qualname__)
+                for _ in range(min(declared, _FALLBACK_MAX_EXAMPLES)):
+                    fn(*(s.example(rng) for s in strategies))
+
+            # pytest resolves fixtures from the signature; the drawn arguments
+            # are supplied here, so expose a zero-arg signature (and drop the
+            # __wrapped__ link functools.wraps adds, which signature() follows).
+            wrapper.__dict__.pop("__wrapped__", None)
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+
+        return deco

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.data.pcaplite import parse_fast, parse_python, write_pcaplite
 from repro.data.plq import plq_info, read_plq, read_plq_chunks, write_plq
