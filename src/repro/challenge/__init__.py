@@ -13,6 +13,7 @@ from .pipeline import (
     ChallengeRun,
     analyze,
     cross_window_ip_overlap,
+    distributed_scalar_queries,
     run_challenge,
 )
 
@@ -23,5 +24,6 @@ __all__ = [
     "ChallengeRun",
     "analyze",
     "cross_window_ip_overlap",
+    "distributed_scalar_queries",
     "run_challenge",
 ]

@@ -1,4 +1,4 @@
-"""End-to-end Anonymized Network Sensing pipeline (DESIGN.md §6).
+"""End-to-end Anonymized Network Sensing pipeline (DESIGN.md §7).
 
 The paper's defining feature is that the challenge is measured as one
 *workload*, not a kernel: data I/O, graph-table construction, anonymization
@@ -61,6 +61,7 @@ __all__ = [
     "ChallengeRun",
     "cross_window_ip_overlap",
     "analyze",
+    "distributed_scalar_queries",
     "run_challenge",
 ]
 
@@ -362,7 +363,7 @@ def analyze(
         unique_sources=unique(t["src"], n_valid=t.n_valid),
         unique_destinations=unique(t["dst"], n_valid=t.n_valid),
         top=top_links(t, k),
-        windowed=windowed_queries(t, 1, n_windows, ts_col="win"),
+        windowed=windowed_queries(t, 1, n_windows, ts_col="win", t0=0),
         window_activity=activity,
         window_ip_overlap=cross_window_ip_overlap(t, n_windows, backend),
     )
@@ -438,7 +439,7 @@ def run_challenge(
 
     if cfg.distributed and len(jax.devices()) > 1:
         results = dataclasses.replace(
-            results, scalars=_distributed_scalars(anon.table)
+            results, scalars=distributed_scalar_queries(anon.table)
         )
 
     if cfg.fused:
@@ -468,8 +469,14 @@ def _time_fused(cfg, src, dst, win, n, key, kw) -> float:
     return time.perf_counter() - t0
 
 
-def _distributed_scalars(t: Table) -> QueryResults:
-    """Scalar suite via the shard_map path over all local devices."""
+def distributed_scalar_queries(t: Table) -> QueryResults:
+    """Scalar suite via the shard_map path over all local devices.
+
+    Accepts any packet-shaped table (``src``, ``dst``, optional
+    ``n_packets`` weights) — the streaming engine reuses this to merge its
+    accumulated link-table state through ``repro.dist`` (weighted links are
+    query-equivalent to the packets they summarize).
+    """
     from jax.sharding import PartitionSpec as P
 
     from ..compat import shard_map

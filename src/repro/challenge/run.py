@@ -20,9 +20,12 @@ from ..core.ref import ref_run_all_queries
 from .pipeline import ChallengeConfig, ChallengeRun, run_challenge
 
 
-def format_queries(run: ChallengeRun) -> str:
-    """The 14 Table III queries, in paper order."""
-    r = run.results
+def format_queries(r) -> str:
+    """The 14 Table III queries, in paper order.
+
+    ``r`` is a ChallengeResults — produced by the batch pipeline or by a
+    stream snapshot (repro.stream reuses this formatter).
+    """
     s = r.scalars
 
     def group_head(g, agg: str, k: int = 3) -> str:
@@ -60,9 +63,8 @@ def format_queries(run: ChallengeRun) -> str:
     return "\n".join(out)
 
 
-def format_extras(run: ChallengeRun) -> str:
-    r = run.results
-    nw = run.config.n_windows
+def format_extras(r, nw: int) -> str:
+    """Per-window statistics + heaviest links (``r`` as in format_queries)."""
     out = ["", f"per-window statistics ({nw} windows):"]
     keys = ("valid_packets", "unique_links", "n_unique_sources",
             "max_source_fanout")
@@ -143,8 +145,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
 
     print("\n" + run.timings.format_table())
     print()
-    print(format_queries(run))
-    print(format_extras(run))
+    print(format_queries(run.results))
+    print(format_extras(run.results, run.config.n_windows))
 
     if args.verify:
         bad = verify_scalars(run)

@@ -42,6 +42,7 @@ def windowed_queries(
     window_len: int,
     n_windows: int,
     ts_col: str = "ts",
+    t0=None,
 ) -> Dict[str, jnp.ndarray]:
     """All scalar challenge statistics per time window.
 
@@ -49,6 +50,10 @@ def windowed_queries(
       t: packet table with ``src``, ``dst``, ``ts`` (+ optional n_packets).
       window_len: window duration in ts units.
       n_windows: static number of windows to emit (extra windows are empty).
+      t0: window origin.  Defaults to the column minimum; pass ``t0=0`` when
+        ``ts_col`` already holds window ids (the streaming engine's link
+        tables may not contain window 0 mid-stream, and the min-derived
+        origin would silently shift every window).
 
     Returns a dict of (n_windows,) arrays:
       valid_packets, unique_links, max_link_packets, n_unique_sources,
@@ -56,7 +61,7 @@ def windowed_queries(
       max_destination_packets, max_destination_fanin.
     """
     w = t["n_packets"] if "n_packets" in t else jnp.ones((t.capacity,), jnp.int32)
-    win = jnp.clip(window_ids(t[ts_col], window_len), 0, n_windows - 1)
+    win = jnp.clip(window_ids(t[ts_col], window_len, t0=t0), 0, n_windows - 1)
     valid = t.valid_mask()
     win_seg = jnp.where(valid, win, n_windows)
 

@@ -21,7 +21,17 @@ __all__ = ["Prefetcher", "lm_batches", "recsys_batches", "packet_table_batches"]
 
 
 class Prefetcher:
-    """Wrap a batch-producing iterator with a depth-N background thread."""
+    """Wrap a batch-producing iterator with a depth-N background thread.
+
+    Error contract (fail fast): if the producer raises, the exception is
+    re-raised on the *next* ``__next__`` call — queued-but-unconsumed batches
+    are dropped.  The naive design (error sentinel at the queue tail) only
+    surfaced the failure after up to ``depth`` already-prefetched batches
+    drained, so a consumer could keep training on stale data for several
+    steps after its input pipeline had already died.  ``_err`` is published
+    before the ``_done`` sentinel is enqueued, so once the producer thread
+    has failed, every subsequent ``__next__`` raises deterministically.
+    """
 
     def __init__(self, it: Iterator, depth: int = 2):
         self._q: "queue.Queue" = queue.Queue(maxsize=depth)
@@ -32,20 +42,45 @@ class Prefetcher:
             try:
                 for item in it:
                     self._q.put(item)
-            except BaseException as e:  # surfaced on next()
+            except BaseException as e:  # surfaced on next() — see class doc
                 self._err = e
             finally:
-                self._q.put(self._done)
+                if self._err is not None:
+                    # The fail-fast contract drops queued items anyway; a
+                    # blocking put here could leave this thread stuck forever
+                    # on a full queue (the failing consumer never drains it).
+                    # Discard queued items until the sentinel fits.
+                    while True:
+                        try:
+                            self._q.put_nowait(self._done)
+                            break
+                        except queue.Full:
+                            try:
+                                self._q.get_nowait()
+                            except queue.Empty:
+                                pass
+                else:
+                    self._q.put(self._done)
 
         self._t = threading.Thread(target=run, daemon=True)
         self._t.start()
+        self._exhausted = False
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        """Wait for the producer thread to finish (tests / orderly shutdown)."""
+        self._t.join(timeout)
 
     def __iter__(self):
         return self
 
     def __next__(self):
+        if self._err is not None:  # fail fast: don't drain queued items
+            raise self._err
+        if self._exhausted:
+            raise StopIteration
         item = self._q.get()
         if item is self._done:
+            self._exhausted = True
             if self._err is not None:
                 raise self._err
             raise StopIteration

@@ -52,11 +52,35 @@ def _hist_kernel(ids_ref, w_ref, out_ref, *, block_bins: int):
     out_ref[...] += partial
 
 
+def _hist_kernel_accum(ids_ref, w_ref, init_ref, out_ref, *, block_bins: int):
+    """Accumulate variant: the output tile is seeded from ``init_ref``
+    instead of zeros (the streaming merge path — kernels/ops.histogram
+    ``init=``), so running per-batch histograms fold into a persistent
+    accumulator without a separate add dispatch."""
+    j = pl.program_id(1)
+    i = pl.program_id(0)
+    ids = ids_ref[...]
+    w = w_ref[...].astype(jnp.float32)
+    base = i * block_bins
+    bins = base + jax.lax.broadcasted_iota(jnp.int32, (1, block_bins), 1)
+    onehot = (ids.T == bins).astype(jnp.float32)
+    partial = jax.lax.dot_general(
+        w, onehot, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = init_ref[...].astype(jnp.float32)
+
+    out_ref[...] += partial
+
+
 def histogram_pallas(
     ids: jnp.ndarray,
     num_bins: int,
     weights: Optional[jnp.ndarray] = None,
     *,
+    init: Optional[jnp.ndarray] = None,
     block_rows: int = DEFAULT_BLOCK_ROWS,
     block_bins: int = DEFAULT_BLOCK_BINS,
     interpret: bool = False,
@@ -64,7 +88,9 @@ def histogram_pallas(
     """Weighted histogram over int32 ids; out-of-range ids are dropped.
 
     Inputs are padded to block multiples; padded rows get id == -1 (matches
-    no bin).  Returns float32 counts of shape (num_bins,).
+    no bin).  ``init`` (shape ``(num_bins,)``) seeds the output instead of
+    zeros — the mergeable-accumulator path: ``out = init + histogram(ids)``
+    in one dispatch.  Returns float32 counts of shape (num_bins,).
     """
     n = ids.shape[0]
     if weights is None:
@@ -76,15 +102,27 @@ def histogram_pallas(
     bins_padded = num_bins + b_pad
 
     grid = (bins_padded // block_bins, ids_p.shape[1] // block_rows)
+    row_spec = pl.BlockSpec((1, block_rows), lambda i, j: (0, j))
+    bin_spec = pl.BlockSpec((1, block_bins), lambda i, j: (0, i))
+    if init is None:
+        kernel, in_specs, operands = (
+            functools.partial(_hist_kernel, block_bins=block_bins),
+            [row_spec, row_spec],
+            (ids_p, w_p),
+        )
+    else:
+        init_p = jnp.pad(init.astype(jnp.float32), (0, b_pad))[None, :]
+        kernel, in_specs, operands = (
+            functools.partial(_hist_kernel_accum, block_bins=block_bins),
+            [row_spec, row_spec, bin_spec],
+            (ids_p, w_p, init_p),
+        )
     out = pl.pallas_call(
-        functools.partial(_hist_kernel, block_bins=block_bins),
+        kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, block_rows), lambda i, j: (0, j)),
-            pl.BlockSpec((1, block_rows), lambda i, j: (0, j)),
-        ],
-        out_specs=pl.BlockSpec((1, block_bins), lambda i, j: (0, i)),
+        in_specs=in_specs,
+        out_specs=bin_spec,
         out_shape=jax.ShapeDtypeStruct((1, bins_padded), jnp.float32),
         interpret=interpret,
-    )(ids_p, w_p)
+    )(*operands)
     return out[0, :num_bins]

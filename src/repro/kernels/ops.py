@@ -29,7 +29,7 @@ from .segment_matmul import segment_matmul_pallas
 __all__ = ["histogram", "windowed_histogram", "segment_reduce", "attention"]
 
 # One-hot matmul beats scatter only while S is modest; see DESIGN.md §2 and
-# the §Perf napkin math (2·n·S flops vs ~12·n bytes of scatter traffic).
+# the §2.2 napkin math (2·n·S flops vs ~12·n bytes of scatter traffic).
 _MATMUL_SEGMENT_LIMIT = 4096
 
 
@@ -38,16 +38,26 @@ def histogram(
     num_bins: int,
     weights: Optional[jnp.ndarray] = None,
     *,
+    init: Optional[jnp.ndarray] = None,
     backend: str = "auto",
 ) -> jnp.ndarray:
+    """Weighted histogram with an optional accumulate path.
+
+    ``init`` (float32, shape ``(num_bins,)``) is a running accumulator the
+    batch folds into — ``out = init + histogram(ids, weights)`` — the
+    mergeable-state primitive of the streaming engine (DESIGN.md §6).  On
+    the Pallas path the accumulator seeds the output tile in VMEM instead
+    of zeros, so accumulation costs no extra dispatch.
+    """
     if backend == "auto":
         backend = "pallas" if (
             jax.default_backend() == "tpu" and num_bins <= _MATMUL_SEGMENT_LIMIT
         ) else "xla"
     if backend == "xla":
-        return ref.ref_histogram(ids, num_bins, weights)
+        out = ref.ref_histogram(ids, num_bins, weights)
+        return out if init is None else init.astype(jnp.float32) + out
     return histogram_pallas(
-        ids, num_bins, weights, interpret=(backend == "interpret")
+        ids, num_bins, weights, init=init, interpret=(backend == "interpret")
     )
 
 
@@ -58,6 +68,7 @@ def windowed_histogram(
     num_bins: int,
     weights: Optional[jnp.ndarray] = None,
     *,
+    init: Optional[jnp.ndarray] = None,
     backend: str = "auto",
 ) -> jnp.ndarray:
     """Per-temporal-window histograms in ONE kernel dispatch.
@@ -67,16 +78,21 @@ def windowed_histogram(
     Instead the (window, id) pair is fused into a single flattened bin space
     ``win * num_bins + id`` so every window batches through one
     ``histogram_pallas`` grid (the bin-tile axis simply grows n_windows-fold
-    — same VMEM budget per step, DESIGN.md §2/§6).
+    — same VMEM budget per step, DESIGN.md §2/§7).
 
-    Rows with ``win`` or ``ids`` outside range are dropped (fused id -1).
-    Returns float32 counts of shape (n_windows, num_bins).
+    ``init`` (shape ``(n_windows, num_bins)``) is a running accumulator the
+    batch folds into — the streaming engine's per-window activity merge
+    (DESIGN.md §6).  Rows with ``win`` or ``ids`` outside range are dropped
+    (fused id -1).  Returns float32 counts of shape (n_windows, num_bins).
     """
     ok = (win >= 0) & (win < n_windows) & (ids >= 0) & (ids < num_bins)
     fused = jnp.where(
         ok, win.astype(jnp.int32) * num_bins + ids.astype(jnp.int32), -1
     )
-    flat = histogram(fused, n_windows * num_bins, weights, backend=backend)
+    flat_init = None if init is None else init.reshape(n_windows * num_bins)
+    flat = histogram(
+        fused, n_windows * num_bins, weights, init=flat_init, backend=backend
+    )
     return flat.reshape(n_windows, num_bins)
 
 

@@ -1,101 +1,131 @@
-"""Analytics serving driver — the paper's pipeline as a batched service.
+"""Analytics serving driver — the streaming engine as a batched service.
 
-Serves the 14 challenge queries over packet-table batches: ingest (plq or
-pcaplite) → anonymize → queries, timing each phase like the paper's
-benchmark protocol (load / anonymize / analyze).  ``--distributed`` runs the
-shard_map query path over all local devices.
+Built on ``repro.stream`` (DESIGN.md §6): packet micro-batches (plq row
+groups) are prefetched by a background thread, transferred host->device
+while the previous update still runs (double buffering via JAX async
+dispatch), and folded into mergeable state from which the 14 challenge
+queries are served at any point.  Batch 0 carries trace+compile and is
+excluded from the steady-state numbers (``--time-phases`` blocks per phase
+for attributable walls; the default overlapped mode is the throughput
+measurement — docs/METHODOLOGY.md).  ``--distributed`` merges the
+accumulated state through the repro.dist shard_map path over all local
+devices at query time.
 
-    PYTHONPATH=src python -m repro.launch.serve --n-packets 1000000 --batches 4
+    PYTHONPATH=src python -m repro.launch.serve --n-packets 1000000 \
+        --batch-size 65536 --snapshot-every 4
 """
 import argparse
 import os
+import sys
 import tempfile
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
 
-
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--n-packets", type=int, default=1 << 20)
-    ap.add_argument("--scale", type=int, default=18)
-    ap.add_argument("--batches", type=int, default=4)
-    ap.add_argument("--method", default="shuffle", choices=["shuffle", "hash"])
-    ap.add_argument("--distributed", action="store_true")
-    args = ap.parse_args()
-
-    from ..core.table import Table
-    from ..core.queries import run_all_queries
-    from ..core.anonymize import anonymize
-    from ..data.rmat import synthetic_packets
-    from ..data.plq import write_plq, read_plq
-
-    tmp = tempfile.mkdtemp(prefix="netsense_")
-    plq_path = os.path.join(tmp, "packets.plq")
-
-    # ---- ingest phase (paper Table II protocol) ----
-    t0 = time.time()
-    cols = synthetic_packets(args.n_packets, scale=args.scale, seed=0)
-    t_gen = time.time() - t0
-    write_plq(plq_path, cols)
-    t0 = time.time()
-    cols = read_plq(plq_path, ["src", "dst"])
-    t_load = time.time() - t0
-    print(f"[serve] generated {args.n_packets:,} packets ({t_gen:.2f}s), "
-          f"plq load {t_load:.3f}s", flush=True)
-
-    n = args.n_packets
-    table = Table.from_dict(
-        {"src": jnp.asarray(cols["src"].astype(np.int32)),
-         "dst": jnp.asarray(cols["dst"].astype(np.int32))},
-        n_valid=n,
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.serve",
+        description="Streaming analytics service over packet micro-batches",
     )
+    ap.add_argument("--n-packets", type=int, default=1 << 20)
+    ap.add_argument("--scale", type=int, default=18,
+                    help="RMAT vertex scale of the synthetic capture")
+    ap.add_argument("--batch-size", type=int, default=1 << 16,
+                    help="micro-batch rows (= plq row-group size)")
+    ap.add_argument("--windows", type=int, default=8)
+    ap.add_argument("--ip-bins", type=int, default=1024)
+    ap.add_argument("--top-k", type=int, default=10)
+    ap.add_argument("--link-capacity", type=int, default=None,
+                    help="distinct (window,src,dst) state budget "
+                         "(default n_packets: always exact)")
+    ap.add_argument("--ip-capacity", type=int, default=None,
+                    help="anonymization dictionary budget "
+                         "(default 2*link_capacity: always exact)")
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "xla", "pallas", "interpret"])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--snapshot-every", type=int, default=0, metavar="K",
+                    help="serve the scalar suite after every K batches")
+    ap.add_argument("--time-phases", action="store_true",
+                    help="block per phase (accurate walls, no overlap)")
+    ap.add_argument("--distributed", action="store_true",
+                    help="query-time scalar merge via repro.dist shard_map")
+    ap.add_argument("--workdir", default=None)
+    args = ap.parse_args(argv)
 
-    # ---- anonymize phase ----
-    anon_fn = jax.jit(lambda t, k: anonymize(t, k, method=args.method))
-    t0 = time.time()
-    res = anon_fn(table, jax.random.key(0))
-    jax.block_until_ready(res.table.columns)
-    t_anon = time.time() - t0
-    print(f"[serve] anonymize ({args.method}): {t_anon:.3f}s "
-          f"(n_ips={int(res.n_ips):,})", flush=True)
+    from ..challenge.pipeline import window_column
+    from ..data.plq import read_plq
+    from ..stream.engine import StreamConfig, StreamEngine, steady_state, stream_plq
+    from ..stream.run import format_timings, prepare_capture
 
-    # ---- query phase (batched service) ----
-    if args.distributed and len(jax.devices()) > 1:
-        from jax.sharding import PartitionSpec as P
-        from ..compat import shard_map
-        from ..dist.relational import distributed_queries
-        from .mesh import make_analytics_mesh
+    workdir = args.workdir or tempfile.mkdtemp(prefix="netsense_serve_")
+    os.makedirs(workdir, exist_ok=True)
+    n = args.n_packets
+    batch = min(args.batch_size, n)
 
-        mesh = make_analytics_mesh()
-        qfn = jax.jit(shard_map(
-            lambda s, d: distributed_queries(
-                Table.from_dict({"src": s, "dst": d}), "rows"),
-            mesh=mesh, in_specs=(P("rows"), P("rows")), out_specs=P(),
-        ))
-        run = lambda t: qfn(t["src"], t["dst"])
-    else:
-        qfn = jax.jit(run_all_queries)
-        run = qfn
-
-    t_total = 0.0
-    for b in range(args.batches):
-        t0 = time.time()
-        out = run(res.table)
-        jax.block_until_ready(out)
-        dt = time.time() - t0
-        t_total += dt
-        label = "compile+run" if b == 0 else "run"
-        print(f"[serve] queries batch {b}: {dt:.3f}s ({label})", flush=True)
-    d = out if isinstance(out, dict) else out.as_dict()
-    print("[serve] results:", {k: int(v) for k, v in sorted(d.items())}, flush=True)
-    print(f"[serve] steady-state query latency: "
-          f"{t_total / max(args.batches - 1, 1):.3f}s "
-          f"({args.n_packets / (t_total / max(args.batches - 1, 1)) / 1e6:.1f}M pkt/s)",
+    # ---- ingest setup (paper Table II protocol: generate once, reuse) ----
+    t0 = time.perf_counter()
+    path = prepare_capture(workdir, n, args.scale, args.seed, batch)
+    t_cap = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    ts = read_plq(path, ["ts"])["ts"]
+    win_full = window_column(ts, args.windows)
+    t_meta = time.perf_counter() - t0
+    n_batches = -(-n // batch)
+    print(f"[serve] capture ready: {n:,} packets in {n_batches} row groups "
+          f"of <= {batch:,} ({t_cap:.2f}s), window metadata {t_meta:.3f}s",
           flush=True)
+
+    try:
+        cfg = StreamConfig(
+            batch_capacity=batch,
+            link_capacity=n if args.link_capacity is None
+            else args.link_capacity,
+            ip_capacity=args.ip_capacity,
+            n_windows=args.windows, ip_bins=args.ip_bins, top_k=args.top_k,
+            backend=args.backend,
+        )
+    except ValueError as e:
+        ap.error(str(e))
+    engine = StreamEngine(cfg)
+
+    def on_batch(i, eng):
+        if args.snapshot_every and (i + 1) % args.snapshot_every == 0:
+            t0 = time.perf_counter()
+            snap = eng.snapshot()
+            dt = time.perf_counter() - t0
+            s = snap.results.scalars
+            print(f"[serve] snapshot@batch {i}: packets={snap.n_packets:,} "
+                  f"links={int(s.unique_links):,} ips={snap.n_ips:,} "
+                  f"({dt:.3f}s)", flush=True)
+
+    # ---- stream phase (double-buffered service loop) ----
+    t0 = time.perf_counter()
+    timings = stream_plq(engine, path, win_full,
+                         time_phases=args.time_phases, on_batch=on_batch)
+    wall = time.perf_counter() - t0
+    print("\n" + format_timings(timings), flush=True)
+    ss = steady_state(timings)
+    print(f"[serve] end-to-end stream wall {wall:.3f}s "
+          f"({n / wall:,.0f} packets/s incl. compile; steady state "
+          f"{ss['packets_per_s']:,.0f} packets/s)", flush=True)
+
+    # ---- query phase ----
+    t0 = time.perf_counter()
+    snap = engine.snapshot(distributed=args.distributed)
+    t_q = time.perf_counter() - t0
+    d = {k: int(v) for k, v in sorted(snap.results.scalars.as_dict().items())}
+    print(f"[serve] results ({'distributed' if args.distributed else 'local'}"
+          f" scalar suite, {t_q:.3f}s):", d, flush=True)
+    print(f"[serve] state: {snap.n_links:,} links, {snap.n_ips:,} dictionary "
+          f"entries, overflow={snap.overflow}", flush=True)
+    if snap.overflow:
+        print(f"[serve] WARNING: state overflow={snap.overflow} — results "
+              "are unreliable (dropped links undercount, dropped dictionary "
+              "entries alias ids); raise --link-capacity/--ip-capacity",
+              file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

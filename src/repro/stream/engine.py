@@ -1,0 +1,537 @@
+"""Incremental analytics engine over packet micro-batches (DESIGN.md §6).
+
+``StreamEngine`` consumes micro-batches (plq row-group chunks via
+``data.pipeline.Prefetcher``, or any ``(src, dst, win)`` column slices) and
+folds each one into a :class:`repro.stream.state.StreamState`:
+
+  1. **dictionary update** — batch-distinct IPs not yet in the persistent
+     anonymization dictionary get the next free stable ids, and the sorted
+     dictionary is rebuilt by one validity-masked merge sort;
+  2. **link accumulation** — the batch's ``(window, src, dst)`` group-by is
+     merged into the accumulated windowed traffic matrix by one concat +
+     group-by (the engine's sort-based replacement for a hash-table upsert);
+  3. **activity accumulation** — the batch's per-window hashed-source
+     histogram folds into the running accumulator through the kernels.ops
+     accumulate path (``windowed_histogram(..., init=state.activity)``).
+
+All 14 Table III queries are answerable *at any point* from the state alone
+(``snapshot()``), with results identical to a one-shot batch run over the
+packets seen so far: the snapshot routes the accumulated link table —
+weighted by per-link packet sums — through the same ``challenge.analyze``
+program the batch pipeline uses, so equivalence holds by construction
+(weighted links are query-equivalent to the packets they summarize).
+
+``merge_states`` combines two independently built states (host-sharded
+streaming); ``snapshot(distributed=True)`` instead merges one state's link
+table through the ``repro.dist`` shard_map path across local devices.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..challenge.pipeline import ChallengeResults
+from ..challenge.pipeline import analyze as challenge_analyze
+from ..challenge.pipeline import distributed_scalar_queries
+from ..core.ops import factorize, groupby_aggregate, isin, mix32, multi_key_sort
+from ..core.table import Table
+from ..data.pipeline import Prefetcher
+from ..data.plq import read_plq_chunks
+from ..kernels.ops import windowed_histogram
+from .state import StreamState, init_state
+
+__all__ = [
+    "StreamConfig",
+    "StreamEngine",
+    "StreamBatchTimings",
+    "StreamSnapshot",
+    "update_state",
+    "merge_states",
+    "link_table",
+    "anonymization_mapping",
+    "stream_plq",
+    "steady_state",
+]
+
+_I32_MAX = jnp.iinfo(jnp.int32).max
+
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Static capacities + query parameters of one stream engine.
+
+    ``link_capacity`` bounds the distinct ``(window, src, dst)`` groups the
+    state can hold and ``ip_capacity`` the distinct IPs; exceeding either is
+    *counted* in ``state.overflow`` (reported, never silent).  Results are
+    exact iff overflow == 0: dropped links undercount, and dropped
+    dictionary entries additionally alias their IPs onto surviving stable
+    ids at snapshot time — an overflowed state's results are unreliable,
+    not merely lower bounds.  ``batch_capacity`` is the static micro-batch
+    buffer size: re-jitting happens per capacity, never per batch occupancy.
+    """
+
+    batch_capacity: int
+    link_capacity: int
+    ip_capacity: Optional[int] = None    # default: 2 * link_capacity
+    n_windows: int = 8
+    ip_bins: int = 1024
+    top_k: int = 10
+    backend: str = "auto"                # histogram kernel dispatch
+
+    def __post_init__(self):
+        for f in ("batch_capacity", "link_capacity", "ip_capacity",
+                  "n_windows", "ip_bins", "top_k"):
+            if getattr(self, f) is not None and getattr(self, f) < 1:
+                raise ValueError(f"{f} must be >= 1")
+
+    @property
+    def ips(self) -> int:
+        # each link contributes at most 2 distinct IPs
+        return self.ip_capacity or 2 * self.link_capacity
+
+
+# ---------------------------------------------------------------------------
+# the state transition (pure, jittable, donates the old state)
+# ---------------------------------------------------------------------------
+
+def _rank_among(order: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """rank[i] = position of ``order[i]`` among the masked entries sorted
+    ascending (garbage where ``~mask``).  Orders must be distinct."""
+    cap = order.shape[0]
+    idx = jnp.arange(cap, dtype=jnp.int32)
+    (_,), (slot,) = multi_key_sort(
+        [order.astype(jnp.int32)], [idx], valid_mask=mask
+    )
+    return jnp.zeros((cap,), jnp.int32).at[slot].set(idx)
+
+
+def _merge_dictionary(
+    values: jnp.ndarray,
+    ids: jnp.ndarray,
+    n: jnp.ndarray,
+    cand_values: jnp.ndarray,
+    cand_new: jnp.ndarray,
+    cand_order: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Insert candidate IPs (sorted distinct, ``cand_new`` mask) into the
+    dictionary.  New entries get ids ``n, n+1, ...`` following ascending
+    ``cand_order`` (first-appearance positions — the rule that makes ids
+    invariant to how the stream is cut into micro-batches); existing ids
+    never change (the stability contract).  Returns ``(values, ids, n,
+    dropped)`` with ``dropped`` > 0 iff capacity filled.
+    """
+    cap = values.shape[0]
+    n_new = jnp.sum(cand_new).astype(jnp.int32)
+    fresh = n + _rank_among(cand_order, cand_new)
+    cat_v = jnp.concatenate([values, cand_values.astype(jnp.int32)])
+    cat_i = jnp.concatenate([ids, fresh.astype(jnp.int32)])
+    cat_ok = jnp.concatenate(
+        [jnp.arange(cap, dtype=jnp.int32) < n, cand_new]
+    )
+    (sv,), (si,) = multi_key_sort([cat_v], [cat_i], valid_mask=cat_ok)
+    total = n + n_new
+    n2 = jnp.minimum(total, cap)
+    live = jnp.arange(cap, dtype=jnp.int32) < n2
+    return (
+        jnp.where(live, sv[:cap], _I32_MAX),
+        jnp.where(live, si[:cap], 0),
+        n2,
+        (total - n2).astype(jnp.int32),
+    )
+
+
+def _merge_links(
+    state: StreamState,
+    keys: Sequence[jnp.ndarray],
+    packets: jnp.ndarray,
+    valid: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Merge incoming distinct links into the accumulated link table: one
+    concat + (win, src, dst) group-by with packet sums — the sort-based
+    upsert.  Truncation on overflow keeps the lexicographically smallest
+    groups (deterministic) and is counted, never silent."""
+    cap = state.link_capacity
+    state_valid = jnp.arange(cap, dtype=jnp.int32) < state.n_links
+    merged = groupby_aggregate(
+        [jnp.concatenate([state.win, keys[0]]),
+         jnp.concatenate([state.src, keys[1]]),
+         jnp.concatenate([state.dst, keys[2]])],
+        {"packets": (jnp.concatenate([state.packets, packets]), "sum")},
+        valid_mask=jnp.concatenate([state_valid, valid]),
+        count_name=None,
+    )
+    n2 = jnp.minimum(merged.n_groups, cap)
+    dropped = (merged.n_groups - n2).astype(jnp.int32)
+    live = jnp.arange(cap, dtype=jnp.int32) < n2
+    return (
+        jnp.where(live, merged.keys[0][:cap], _I32_MAX),
+        jnp.where(live, merged.keys[1][:cap], _I32_MAX),
+        jnp.where(live, merged.keys[2][:cap], _I32_MAX),
+        jnp.where(live, merged.aggs["packets"][:cap].astype(jnp.int32), 0),
+        n2,
+        dropped,
+    )
+
+
+def update_state(
+    state: StreamState,
+    src: jnp.ndarray,
+    dst: jnp.ndarray,
+    win: jnp.ndarray,
+    n_valid: jnp.ndarray,
+    *,
+    backend: str = "auto",
+) -> StreamState:
+    """Fold one micro-batch (padded to ``batch_capacity``) into the state."""
+    n_windows, ip_bins = state.n_windows, state.ip_bins
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    src = src.astype(jnp.int32)
+    dst = dst.astype(jnp.int32)
+    win = jnp.clip(win.astype(jnp.int32), 0, n_windows - 1)
+    t = Table(columns={"src": src, "dst": dst}, n_valid=n_valid)
+    valid = t.valid_mask()
+
+    # 1. persistent anonymization dictionary.  Batch-distinct IPs carry
+    # their first-appearance position (row-major, src before dst) so new
+    # ids follow first-seen order — invariant to micro-batch boundaries.
+    rows = jnp.arange(src.shape[0], dtype=jnp.int32)
+    bu = groupby_aggregate(
+        [jnp.concatenate([src, dst])],
+        {"first_pos": (jnp.concatenate([2 * rows, 2 * rows + 1]), "min")},
+        valid_mask=jnp.concatenate([valid, valid]),
+        count_name=None,
+    )
+    known = isin(bu.keys[0], state.ip_values, state.n_ips,
+                 n_valid=bu.n_groups)
+    new = bu.mask() & ~known
+    ip_values, ip_ids, n_ips, ov_ips = _merge_dictionary(
+        state.ip_values, state.ip_ids, state.n_ips,
+        bu.keys[0], new, bu.aggs["first_pos"],
+    )
+
+    # 2. accumulated windowed traffic matrix
+    bl = groupby_aggregate(
+        [win, src, dst],
+        {"packets": (jnp.ones((src.shape[0],), jnp.int32), "sum")},
+        n_valid=n_valid,
+        count_name=None,
+    )
+    w2, s2, d2, pk2, n_links, ov_links = _merge_links(
+        state, bl.keys, bl.aggs["packets"], bl.mask()
+    )
+
+    # 3. per-window activity accumulator (kernels.ops accumulate path).
+    # Bins hash the ORIGINAL IP so independently built states merge by
+    # addition; the (lossy) sketch does not expose ids — see DESIGN.md §6.
+    act_ids = jnp.where(
+        valid, (mix32(src) % jnp.uint32(ip_bins)).astype(jnp.int32), -1
+    )
+    activity = windowed_histogram(
+        win, act_ids, n_windows, ip_bins,
+        weights=valid.astype(jnp.float32),
+        init=state.activity, backend=backend,
+    )
+
+    return StreamState(
+        ip_values=ip_values, ip_ids=ip_ids, n_ips=n_ips,
+        win=w2, src=s2, dst=d2, packets=pk2, n_links=n_links,
+        activity=activity,
+        n_packets=state.n_packets + n_valid,
+        n_batches=state.n_batches + 1,
+        overflow=state.overflow + ov_ips + ov_links,
+    )
+
+
+def merge_states(a: StreamState, b: StreamState) -> StreamState:
+    """Merge two independently built shard states (same capacities).
+
+    Exact for links, scalars and activity; ``b``'s IPs unknown to ``a`` get
+    fresh ids continuing ``a``'s sequence in ``b``'s first-seen order, so
+    the merge is associative/commutative up to id relabeling — see state.py.
+    """
+    if (a.link_capacity != b.link_capacity
+            or a.ip_capacity != b.ip_capacity
+            or a.activity.shape != b.activity.shape):
+        raise ValueError(
+            "merge_states requires equal static capacities and "
+            f"(n_windows, ip_bins): {a.link_capacity}/{a.ip_capacity}/"
+            f"{a.activity.shape} vs {b.link_capacity}/{b.ip_capacity}/"
+            f"{b.activity.shape}"
+        )
+    known = isin(b.ip_values, a.ip_values, a.n_ips, n_valid=b.n_ips)
+    new = (jnp.arange(b.ip_capacity, dtype=jnp.int32) < b.n_ips) & ~known
+    ip_values, ip_ids, n_ips, ov_ips = _merge_dictionary(
+        a.ip_values, a.ip_ids, a.n_ips, b.ip_values, new, b.ip_ids
+    )
+    b_valid = jnp.arange(b.link_capacity, dtype=jnp.int32) < b.n_links
+    w2, s2, d2, pk2, n_links, ov_links = _merge_links(
+        a, (b.win, b.src, b.dst), b.packets, b_valid
+    )
+    return StreamState(
+        ip_values=ip_values, ip_ids=ip_ids, n_ips=n_ips,
+        win=w2, src=s2, dst=d2, packets=pk2, n_links=n_links,
+        activity=a.activity + b.activity,
+        n_packets=a.n_packets + b.n_packets,
+        n_batches=a.n_batches + b.n_batches,
+        overflow=a.overflow + b.overflow + ov_ips + ov_links,
+    )
+
+
+# ---------------------------------------------------------------------------
+# queries over the state
+# ---------------------------------------------------------------------------
+
+def link_table(state: StreamState) -> Table:
+    """The accumulated windowed traffic matrix as an anonymized packet table.
+
+    One row per distinct ``(window, src, dst)`` with ``n_packets`` weights;
+    src/dst are the dictionary's stable ids.  Because every challenge query
+    weights rows by ``n_packets``, this table is query-equivalent to the
+    full packet stream seen so far.
+    """
+    cap = state.link_capacity
+    live = jnp.arange(cap, dtype=jnp.int32) < state.n_links
+    sid = state.ip_ids[factorize(state.src, state.ip_values)]
+    did = state.ip_ids[factorize(state.dst, state.ip_values)]
+    return Table(
+        columns={
+            "win": jnp.where(live, state.win, 0),
+            "src": jnp.where(live, sid, 0),
+            "dst": jnp.where(live, did, 0),
+            "n_packets": jnp.where(live, state.packets, 0),
+        },
+        n_valid=state.n_links,
+    )
+
+
+def _snapshot_results(
+    state: StreamState, *, top_k: int, backend: str
+) -> ChallengeResults:
+    res = challenge_analyze(
+        link_table(state), n_windows=state.n_windows, ip_bins=state.ip_bins,
+        k=top_k, backend=backend,
+    )
+    # the accumulated activity (original-IP bins, mergeable) replaces the
+    # snapshot recomputation (stable-id bins) — same sketch family, but only
+    # the accumulated one adds across shards; see state.py.
+    return dataclasses.replace(res, window_activity=state.activity)
+
+
+def anonymization_mapping(state: StreamState) -> Tuple[np.ndarray, np.ndarray]:
+    """Host copy of the dictionary: ``(original_ips, stable_ids)`` (live rows)."""
+    n = int(state.n_ips)
+    return np.asarray(state.ip_values)[:n], np.asarray(state.ip_ids)[:n]
+
+
+@dataclasses.dataclass
+class StreamSnapshot:
+    """Point-in-time query answer over everything streamed so far."""
+
+    results: ChallengeResults
+    n_packets: int
+    n_batches: int
+    n_links: int
+    n_ips: int
+    overflow: int           # > 0 => results unreliable (never silent):
+                            # dropped links undercount, dropped dictionary
+                            # entries alias ids — see StreamConfig
+
+
+# ---------------------------------------------------------------------------
+# per-batch timings (steady-state protocol, docs/METHODOLOGY.md)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StreamBatchTimings:
+    """Wall seconds of one ingest.  ``compile=True`` batches carry the
+    trace+compile cost and are excluded from steady-state summaries —
+    the same protocol as ``ChallengePhaseTimings.compile_s``."""
+
+    n_packets: int
+    prep_s: float        # host: cast + window slice + padding
+    transfer_s: float    # host->device (explicit only when time_phases)
+    update_s: float      # the jitted state transition
+    total_s: float
+    compile: bool = False
+
+
+def steady_state(timings: Sequence[StreamBatchTimings]) -> Dict[str, float]:
+    """Aggregate steady-state (compile-excluded) per-batch walls."""
+    steady = [t for t in timings if not t.compile]
+    if not steady:
+        return {"batches": 0.0, "batch_s": 0.0, "packets_per_s": 0.0,
+                "prep_s": 0.0, "transfer_s": 0.0, "update_s": 0.0}
+    n = len(steady)
+    pk = sum(t.n_packets for t in steady)
+    tot = sum(t.total_s for t in steady)
+    return {
+        "batches": float(n),
+        "batch_s": tot / n,
+        "packets_per_s": pk / tot if tot > 0 else float("inf"),
+        "prep_s": sum(t.prep_s for t in steady) / n,
+        "transfer_s": sum(t.transfer_s for t in steady) / n,
+        "update_s": sum(t.update_s for t in steady) / n,
+    }
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+class StreamEngine:
+    """Stateful driver around the pure state transition.
+
+    ``ingest`` dispatches asynchronously (JAX's async dispatch): the host
+    returns before the device finishes, so preparing/transferring the next
+    micro-batch overlaps the current update — double buffering falls out of
+    calling ``ingest`` in a loop.  Off-CPU the old state's buffers are
+    donated to the update, so the accumulated state lives in one set of
+    device buffers.
+    """
+
+    def __init__(self, cfg: StreamConfig):
+        self.cfg = cfg
+        self._state = init_state(
+            cfg.link_capacity, cfg.ips, cfg.n_windows, cfg.ip_bins
+        )
+        donate = (0,) if jax.default_backend() != "cpu" else ()
+        self._update = jax.jit(
+            functools.partial(update_state, backend=cfg.backend),
+            donate_argnums=donate,
+        )
+        self._snap = jax.jit(
+            functools.partial(
+                _snapshot_results, top_k=cfg.top_k, backend=cfg.backend
+            )
+        )
+        self.n_ingested = 0
+
+    # -- state access --------------------------------------------------------
+    @property
+    def state(self) -> StreamState:
+        return self._state
+
+    def block(self) -> StreamState:
+        jax.block_until_ready(self._state)
+        return self._state
+
+    def merge_from(self, other: StreamState) -> None:
+        """Fold another shard's state into this engine (host-level merge)."""
+        self._state = merge_states(self._state, other)
+
+    # -- ingest --------------------------------------------------------------
+    def ingest(self, src, dst, win, n_valid: Optional[int] = None) -> None:
+        """Fold one micro-batch; arrays may be shorter than batch_capacity."""
+        cap = self.cfg.batch_capacity
+        n = len(src) if n_valid is None else int(n_valid)
+        if n > cap:
+            raise ValueError(f"micro-batch of {n} rows exceeds "
+                             f"batch_capacity {cap}")
+        pad = lambda a: np.concatenate(
+            [np.asarray(a[:n], np.int32), np.zeros(cap - n, np.int32)]
+        )
+        self.ingest_padded(pad(src), pad(dst), pad(win), n)
+
+    def ingest_padded(self, src, dst, win, n_valid: int) -> None:
+        """Fold a pre-padded (possibly already device-resident) micro-batch."""
+        self._state = self._update(self._state, src, dst, win, n_valid)
+        self.n_ingested += 1
+
+    # -- queries -------------------------------------------------------------
+    def snapshot(self, distributed: bool = False) -> StreamSnapshot:
+        """Answer all challenge queries from the accumulated state.
+
+        ``distributed=True`` merges the state's link table through the
+        ``repro.dist`` shard_map path over all local devices (scalar suite
+        only; raises on exchange overflow per the repo contract).
+        """
+        state = self._state
+        results = self._snap(state)
+        if distributed and len(jax.devices()) > 1:
+            results = dataclasses.replace(
+                results, scalars=distributed_scalar_queries(link_table(state))
+            )
+        jax.block_until_ready(results)
+        return StreamSnapshot(
+            results=results,
+            n_packets=int(state.n_packets),
+            n_batches=int(state.n_batches),
+            n_links=int(state.n_links),
+            n_ips=int(state.n_ips),
+            overflow=int(state.overflow),
+        )
+
+
+# ---------------------------------------------------------------------------
+# plq streaming driver (shared by repro.stream.run and repro.launch.serve)
+# ---------------------------------------------------------------------------
+
+def stream_plq(
+    engine: StreamEngine,
+    path: str,
+    win_full: np.ndarray,
+    *,
+    columns: Sequence[str] = ("src", "dst"),
+    depth: int = 2,
+    time_phases: bool = False,
+    on_batch: Optional[Callable[[int, StreamEngine], None]] = None,
+) -> List[StreamBatchTimings]:
+    """Stream a plq capture's row groups through the engine.
+
+    Row groups are prefetched by a background thread (``Prefetcher``) while
+    the device runs the previous update, and ``jax.device_put`` starts the
+    next host->device copy before the current state is blocked on — the
+    double-buffered service loop.  ``win_full`` holds precomputed window ids
+    for every capture row (chunks arrive in file order).
+
+    ``time_phases=True`` blocks after transfer and update to attribute wall
+    time per phase (accurate phases, no overlap); the default overlapped
+    mode records dispatch walls only and is the throughput measurement —
+    see docs/METHODOLOGY.md.
+    """
+    cap = engine.cfg.batch_capacity
+    timings: List[StreamBatchTimings] = []
+    off = 0
+    for i, chunk in enumerate(Prefetcher(read_plq_chunks(path, list(columns)),
+                                         depth=depth)):
+        t_start = time.perf_counter()
+        n = len(chunk[columns[0]])
+        if n > cap:
+            raise ValueError(
+                f"row group {i} has {n} rows > batch_capacity {cap}; "
+                f"rewrite the capture with row_group_size <= {cap}"
+            )
+        pad = lambda a: np.concatenate(
+            [np.asarray(a, np.int32), np.zeros(cap - len(a), np.int32)]
+        )
+        src = pad(chunk["src"])
+        dst = pad(chunk["dst"])
+        win = pad(win_full[off:off + n])
+        off += n
+        t1 = time.perf_counter()
+        dev_src, dev_dst, dev_win = jax.device_put((src, dst, win))
+        if time_phases:
+            jax.block_until_ready((dev_src, dev_dst, dev_win))
+        t2 = time.perf_counter()
+        engine.ingest_padded(dev_src, dev_dst, dev_win, n)
+        if time_phases:
+            engine.block()
+        t3 = time.perf_counter()
+        timings.append(StreamBatchTimings(
+            n_packets=n, prep_s=t1 - t_start, transfer_s=t2 - t1,
+            update_s=t3 - t2, total_s=t3 - t_start, compile=(i == 0),
+        ))
+        if on_batch is not None:
+            on_batch(i, engine)
+    engine.block()
+    return timings

@@ -1,0 +1,113 @@
+"""Mergeable incremental stream state (DESIGN.md §6).
+
+The streaming insight: the windowed traffic matrix A_t is a *sufficient
+statistic* for the whole challenge — every Table III query is a function of
+the accumulated ``(window, src, dst) -> packets`` group-by, so the engine
+never needs to retain packets.  ``StreamState`` is that summary plus the
+persistent anonymization dictionary and the per-window activity
+accumulator, all in the engine's static-shape discipline (DESIGN.md §3):
+
+  * ``ip_values``/``ip_ids``/``n_ips`` — the incremental anonymization
+    dictionary: sorted distinct IPs seen so far and their *stable* ids.
+    An IP keeps its id forever (ids are what make per-batch outputs and
+    incremental histograms consistent across the stream); new IPs get the
+    next free ids in *first-appearance* order (row-major, src before dst),
+    which makes the dictionary invariant to how the stream is cut into
+    micro-batches.
+  * ``win``/``src``/``dst``/``packets``/``n_links`` — the accumulated
+    distinct ``(window, src, dst)`` link table with packet sums, keys in
+    the *original* IP domain (the pre-image the dictionary maps; queries
+    emit stable ids by gathering through the dictionary at snapshot time).
+  * ``activity`` — running per-window hashed-source histogram, folded
+    per batch through the kernels.ops accumulate path (``init=``).  Bins
+    hash the original IP (``mix32 % ip_bins``) so two independently built
+    states merge by plain addition.
+  * ``n_packets``/``n_batches``/``overflow`` — totals.  ``overflow``
+    counts dictionary entries and link groups dropped because a static
+    buffer filled: reported, never silent (same contract as repro.dist).
+    Results are exact iff ``overflow == 0`` — dropped links undercount,
+    and dropped dictionary entries additionally alias their IPs onto
+    surviving ids at snapshot time, so overflowed results are unreliable,
+    not merely lower bounds.
+
+Merge contract (``engine.merge_states``): states merge associatively and
+commutatively *up to id relabeling* — the link content, the scalar suite,
+and the activity histogram are exactly the union; only the (necessarily
+arbitrary) id assignment depends on merge order.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["StreamState", "init_state"]
+
+_I32_MAX = jnp.iinfo(jnp.int32).max
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamState:
+    """One shard's accumulated stream state (a pytree; see module doc)."""
+
+    # anonymization dictionary
+    ip_values: jnp.ndarray   # (ip_capacity,) int32 sorted asc, tail = int32 max
+    ip_ids: jnp.ndarray      # (ip_capacity,) int32 stable id per ip_values slot
+    n_ips: jnp.ndarray       # scalar int32
+    # accumulated windowed traffic matrix (original-IP keys)
+    win: jnp.ndarray         # (link_capacity,) int32, tail = int32 max
+    src: jnp.ndarray         # (link_capacity,) int32
+    dst: jnp.ndarray         # (link_capacity,) int32
+    packets: jnp.ndarray     # (link_capacity,) int32 per-link packet sums
+    n_links: jnp.ndarray     # scalar int32
+    # running per-window activity histogram (hashed original-IP bins)
+    activity: jnp.ndarray    # (n_windows, ip_bins) float32
+    # totals
+    n_packets: jnp.ndarray   # scalar int32
+    n_batches: jnp.ndarray   # scalar int32
+    overflow: jnp.ndarray    # scalar int32 — dropped dict entries + link groups
+
+    @property
+    def ip_capacity(self) -> int:
+        return self.ip_values.shape[0]
+
+    @property
+    def link_capacity(self) -> int:
+        return self.src.shape[0]
+
+    @property
+    def n_windows(self) -> int:
+        return self.activity.shape[0]
+
+    @property
+    def ip_bins(self) -> int:
+        return self.activity.shape[1]
+
+
+jax.tree_util.register_dataclass(
+    StreamState,
+    data_fields=[f.name for f in dataclasses.fields(StreamState)],
+    meta_fields=[],
+)
+
+
+def init_state(
+    link_capacity: int, ip_capacity: int, n_windows: int, ip_bins: int
+) -> StreamState:
+    """The empty (identity) state: ``merge(init, s) == s`` for any ``s``."""
+    zero = jnp.zeros((), jnp.int32)
+    return StreamState(
+        ip_values=jnp.full((ip_capacity,), _I32_MAX, jnp.int32),
+        ip_ids=jnp.zeros((ip_capacity,), jnp.int32),
+        n_ips=zero,
+        win=jnp.full((link_capacity,), _I32_MAX, jnp.int32),
+        src=jnp.full((link_capacity,), _I32_MAX, jnp.int32),
+        dst=jnp.full((link_capacity,), _I32_MAX, jnp.int32),
+        packets=jnp.zeros((link_capacity,), jnp.int32),
+        n_links=zero,
+        activity=jnp.zeros((n_windows, ip_bins), jnp.float32),
+        n_packets=zero,
+        n_batches=zero,
+        overflow=zero,
+    )

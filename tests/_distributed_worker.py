@@ -127,10 +127,41 @@ def check_distributed_anonymize():
         np.asarray(out["src"]), np.asarray(out["dst"]))
 
 
+def check_stream_state_distributed_merge():
+    """Streamed state merged through the repro.dist shard_map path.
+
+    An engine accumulates micro-batches; snapshot(distributed=True) routes
+    the accumulated link table through distributed_scalar_queries over the
+    8 forced devices — the 'merge sharded stream state through repro.dist'
+    contract.  Scalars must stay exact.
+    """
+    from repro.challenge.pipeline import window_column
+    from repro.data.rmat import synthetic_packets
+    from repro.stream import StreamConfig, StreamEngine
+
+    n, nw = 1 << 12, 4
+    cols = synthetic_packets(n, scale=12, seed=7)
+    src = cols["src"].astype(np.int32)
+    dst = cols["dst"].astype(np.int32)
+    win = window_column(cols["ts"], nw)
+    eng = StreamEngine(StreamConfig(
+        batch_capacity=1024, link_capacity=n, n_windows=nw, ip_bins=64,
+        top_k=5, backend="xla",
+    ))
+    for i in range(0, n, 1024):
+        eng.ingest(src[i:i + 1024], dst[i:i + 1024], win[i:i + 1024])
+    snap = eng.snapshot(distributed=True)
+    assert snap.overflow == 0
+    for k, v in ref_run_all_queries(src.astype(np.int64),
+                                    dst.astype(np.int64)).items():
+        assert int(getattr(snap.results.scalars, k)) == v, k
+
+
 if __name__ == "__main__":
     check_queries_match_oracle()
     check_skewed_keys_still_exact()
     check_multi_pod_axes()
     check_compression()
     check_distributed_anonymize()
+    check_stream_state_distributed_merge()
     print("ALL_DISTRIBUTED_OK")

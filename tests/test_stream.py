@@ -1,0 +1,355 @@
+"""Streaming engine tests: stream-vs-batch equivalence on all 14 queries,
+incremental anonymization stability, state merge, overflow reporting, and
+the kernels.ops accumulate path."""
+import collections
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.challenge import ChallengeConfig, run_challenge
+from repro.challenge.pipeline import window_column
+from repro.core.ref import (
+    ref_run_all_queries,
+    ref_top_links,
+    ref_traffic_matrix,
+    ref_windowed_histogram,
+)
+from repro.core.ops import mix32
+from repro.kernels.ops import histogram, windowed_histogram
+from repro.stream import (
+    StreamConfig,
+    StreamEngine,
+    anonymization_mapping,
+    merge_states,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# --------------------------------------------------------------- fixtures
+
+def _capture(n=1 << 10, scale=10, seed=0, n_windows=3):
+    from repro.data.rmat import synthetic_packets
+
+    cols = synthetic_packets(n, scale=scale, seed=seed)
+    return (cols["src"].astype(np.int32), cols["dst"].astype(np.int32),
+            window_column(cols["ts"], n_windows), cols)
+
+
+def _stream(src, dst, win, batch, n_windows=3, order=None, **kw):
+    cfg = StreamConfig(
+        batch_capacity=batch, link_capacity=kw.pop("link_capacity", len(src)),
+        n_windows=n_windows, ip_bins=kw.pop("ip_bins", 64),
+        top_k=kw.pop("top_k", 5), backend="xla", **kw,
+    )
+    eng = StreamEngine(cfg)
+    starts = list(range(0, len(src), batch))
+    for s in (starts if order is None else [starts[i] for i in order]):
+        eng.ingest(src[s:s + batch], dst[s:s + batch], win[s:s + batch])
+    return eng
+
+
+def _deanon(engine):
+    """stable id -> original IP gather function for this engine's state."""
+    ips, ids = anonymization_mapping(engine.state)
+    inv = np.zeros(len(ids), np.int64)
+    inv[ids] = ips
+    return lambda a: inv[np.asarray(a, np.int64)]
+
+
+def _group_dict(g, agg, key_fn):
+    n = int(g.n_groups)
+    keys = [np.asarray(k)[:n] for k in g.keys]
+    vals = np.asarray(g.aggs[agg])[:n]
+    return {tuple(key_fn(k[i]) for k in keys): int(vals[i]) for i in range(n)}
+
+
+# ------------------------------------------- stream == batch, 14 queries
+
+def test_stream_matches_batch_all_14_queries(tmp_path):
+    """Streaming N micro-batches then querying == the one-shot batch run.
+
+    Scalars (queries 1,2,4,5,7,9,10,12,14 + unique IPs) must be
+    bit-identical ints.  Vector queries (3,6,8,11,13) are emitted in each
+    side's own anonymized-id domain (stream: stable incremental ids;
+    batch: random shuffle), so they are compared (a) as bit-identical
+    sorted value multisets between stream and batch, and (b) exactly per
+    original key after de-anonymizing the stream side through its
+    dictionary against the NumPy oracle.
+    """
+    nw = 3
+    batch_run = run_challenge(ChallengeConfig(
+        scale=10, n_windows=nw, ip_bins=64, top_k=5, workdir=str(tmp_path),
+    ))
+    cols = batch_run.capture
+    src = cols["src"].astype(np.int32)
+    dst = cols["dst"].astype(np.int32)
+    win = window_column(cols["ts"], nw)
+    eng = _stream(src, dst, win, batch=300, n_windows=nw)
+    snap = eng.snapshot()
+    assert snap.overflow == 0
+
+    # scalars: bit-identical between stream and batch
+    for f in (
+        "valid_packets", "unique_links", "max_link_packets",
+        "n_unique_sources", "n_unique_destinations", "n_unique_ips",
+        "max_source_packets", "max_source_fanout",
+        "max_destination_packets", "max_destination_fanin",
+    ):
+        assert int(getattr(snap.results.scalars, f)) == \
+            int(getattr(batch_run.results.scalars, f)), f
+
+    # vector values: bit-identical multisets between stream and batch
+    for name, agg in (("links", "packets"), ("per_source", "packets"),
+                      ("per_destination", "packets"),
+                      ("source_fanout", "count"),
+                      ("destination_fanin", "count")):
+        sg = getattr(snap.results, name)
+        bg = getattr(batch_run.results, name)
+        assert int(sg.n_groups) == int(bg.n_groups), name
+        ns = int(sg.n_groups)
+        assert sorted(np.asarray(sg.aggs[agg])[:ns].tolist()) == \
+            sorted(np.asarray(bg.aggs[agg])[:ns].tolist()), name
+
+    # top-k heaviest: identical packet counts (ties may reorder keys)
+    ks, kb = int(snap.results.top.n_valid), int(batch_run.results.top.n_valid)
+    assert ks == kb
+    np.testing.assert_array_equal(
+        np.asarray(snap.results.top.packets)[:ks],
+        np.asarray(batch_run.results.top.packets)[:kb],
+    )
+
+    # per-window suite: bit-identical (window ids are anonymization-free)
+    for k, v in snap.results.windowed.items():
+        np.testing.assert_array_equal(
+            np.asarray(v), np.asarray(batch_run.results.windowed[k]), k)
+    np.testing.assert_array_equal(
+        np.asarray(snap.results.window_ip_overlap),
+        np.asarray(batch_run.results.window_ip_overlap),
+    )
+
+    # vector keys: exact per ORIGINAL key once de-anonymized (oracle check)
+    de = _deanon(eng)
+    ls, ld, lp = ref_traffic_matrix(src.astype(np.int64), dst.astype(np.int64))
+    assert _group_dict(snap.results.links, "packets", lambda k: de(k).item()) \
+        == {(s, d): int(p) for s, d, p in zip(ls, ld, lp)}
+    assert _group_dict(snap.results.per_source, "packets",
+                       lambda k: de(k).item()) \
+        == {(k,): v for k, v in collections.Counter(src.tolist()).items()}
+    assert _group_dict(snap.results.destination_fanin, "count",
+                       lambda k: de(k).item()) \
+        == {(k,): v for k, v in collections.Counter(ld.tolist()).items()}
+
+
+def test_stream_queryable_at_any_point():
+    """Mid-stream snapshots answer exactly for the prefix seen so far."""
+    src, dst, win, _ = _capture(n=900)
+    cfg = StreamConfig(batch_capacity=300, link_capacity=900, n_windows=3,
+                       ip_bins=64, top_k=5, backend="xla")
+    eng = StreamEngine(cfg)
+    for i, s in enumerate(range(0, 900, 300)):
+        eng.ingest(src[s:s + 300], dst[s:s + 300], win[s:s + 300])
+        snap = eng.snapshot()
+        n_seen = s + 300
+        assert snap.n_packets == n_seen and snap.n_batches == i + 1
+        ref = ref_run_all_queries(src[:n_seen].astype(np.int64),
+                                  dst[:n_seen].astype(np.int64))
+        for k, v in ref.items():
+            assert int(getattr(snap.results.scalars, k)) == v, (k, i)
+
+
+# ----------------------------------------- incremental anonymization
+
+def test_anonymization_ids_are_stable_across_batches():
+    """Once assigned, an IP's id never changes as more batches arrive."""
+    src, dst, win, _ = _capture(n=1 << 10)
+    cfg = StreamConfig(batch_capacity=256, link_capacity=1 << 10,
+                       n_windows=3, ip_bins=64, top_k=5, backend="xla")
+    eng = StreamEngine(cfg)
+    seen = {}
+    for s in range(0, 1 << 10, 256):
+        eng.ingest(src[s:s + 256], dst[s:s + 256], win[s:s + 256])
+        ips, ids = anonymization_mapping(eng.state)
+        current = dict(zip(ips.tolist(), ids.tolist()))
+        for ip, i in seen.items():
+            assert current[ip] == i, f"ip {ip} changed id {i}->{current[ip]}"
+        seen = current
+    # and the final mapping is a bijection onto [0, n_ips)
+    assert sorted(seen.values()) == list(range(len(seen)))
+
+
+def test_anonymization_stable_across_rechunking():
+    """Same row order cut into different micro-batch sizes => identical
+    dictionary, link state and activity (first-seen order is preserved)."""
+    src, dst, win, _ = _capture(n=840)
+    a = _stream(src, dst, win, batch=840)     # one shot
+    b = _stream(src, dst, win, batch=120)     # 7 micro-batches
+    for f in ("ip_values", "ip_ids", "win", "src", "dst", "packets"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a.state, f)), np.asarray(getattr(b.state, f)), f)
+    for f in ("n_ips", "n_links", "n_packets", "overflow"):
+        assert int(getattr(a.state, f)) == int(getattr(b.state, f)), f
+    np.testing.assert_array_equal(np.asarray(a.state.activity),
+                                  np.asarray(b.state.activity))
+
+
+def test_anonymization_batch_order_invariance():
+    """Permuted batch arrival: ids may differ, but the mapping stays a
+    bijection and every de-anonymized query result is identical."""
+    src, dst, win, _ = _capture(n=900)
+    a = _stream(src, dst, win, batch=300)
+    b = _stream(src, dst, win, batch=300, order=[2, 0, 1])
+    sa, sb = a.snapshot(), b.snapshot()
+    for f in ("valid_packets", "unique_links", "n_unique_ips",
+              "max_source_fanout", "max_destination_packets"):
+        assert int(getattr(sa.results.scalars, f)) == \
+            int(getattr(sb.results.scalars, f)), f
+    _, ids_b = anonymization_mapping(b.state)
+    assert sorted(ids_b.tolist()) == list(range(len(ids_b)))
+    da, db = _deanon(a), _deanon(b)
+    assert _group_dict(sa.results.per_source, "packets",
+                       lambda k: da(k).item()) == \
+        _group_dict(sb.results.per_source, "packets", lambda k: db(k).item())
+    assert _group_dict(sa.results.links, "packets", lambda k: da(k).item()) \
+        == _group_dict(sb.results.links, "packets", lambda k: db(k).item())
+
+
+# ------------------------------------------------------- mergeable state
+
+def test_merge_states_equals_full_stream():
+    """Two shards streamed independently then merged == one full stream
+    (exact links/scalars/activity; ids merge left-biased)."""
+    src, dst, win, _ = _capture(n=1 << 10)
+    half = 512
+    a = _stream(src[:half], dst[:half], win[:half], batch=256,
+                link_capacity=1 << 10)
+    b = _stream(src[half:], dst[half:], win[half:], batch=256,
+                link_capacity=1 << 10)
+    a.merge_from(b.state)
+    snap = a.snapshot()
+    assert snap.overflow == 0
+    assert snap.n_packets == 1 << 10 and snap.n_batches == 4
+    for k, v in ref_run_all_queries(src.astype(np.int64),
+                                    dst.astype(np.int64)).items():
+        assert int(getattr(snap.results.scalars, k)) == v, k
+    full = _stream(src, dst, win, batch=256)
+    np.testing.assert_array_equal(np.asarray(a.state.activity),
+                                  np.asarray(full.state.activity))
+    # merged dictionary is still a bijection
+    _, ids = anonymization_mapping(a.state)
+    assert sorted(ids.tolist()) == list(range(len(ids)))
+
+
+def test_merge_states_rejects_mismatched_shapes():
+    from repro.stream import init_state
+
+    a = init_state(64, 128, n_windows=2, ip_bins=16)
+    b = init_state(64, 128, n_windows=3, ip_bins=16)
+    with pytest.raises(ValueError, match="n_windows, ip_bins"):
+        merge_states(a, b)
+    c = init_state(32, 128, n_windows=2, ip_bins=16)
+    with pytest.raises(ValueError):
+        merge_states(a, c)
+
+
+def test_ip_dictionary_overflow_reported():
+    src, dst, win, _ = _capture(n=1 << 10)
+    eng = _stream(src, dst, win, batch=256, ip_capacity=128)
+    snap = eng.snapshot()
+    assert snap.overflow > 0       # dictionary drops count toward overflow
+    assert snap.n_ips == 128       # dictionary clamped at capacity
+
+
+def test_merge_with_empty_state_is_identity():
+    src, dst, win, _ = _capture(n=512)
+    a = _stream(src, dst, win, batch=256, link_capacity=512)
+    empty = StreamEngine(a.cfg).state
+    m = merge_states(a.state, empty)
+    for f in ("ip_values", "ip_ids", "win", "src", "dst", "packets"):
+        np.testing.assert_array_equal(np.asarray(getattr(m, f)),
+                                      np.asarray(getattr(a.state, f)), f)
+    assert int(m.n_ips) == int(a.state.n_ips)
+    assert int(m.n_links) == int(a.state.n_links)
+
+
+# ------------------------------------------------------ overflow contract
+
+def test_stream_overflow_reported_never_silent():
+    src, dst, win, _ = _capture(n=1 << 10)
+    eng = _stream(src, dst, win, batch=256, link_capacity=64)
+    snap = eng.snapshot()
+    assert snap.overflow > 0       # reported on the state
+    assert snap.n_links == 64      # state clamped at capacity
+
+
+def test_stream_cli_overflow_exit_code(tmp_path):
+    from repro.stream.run import main
+
+    rc = main(["--scale", "9", "--batches", "2", "--link-capacity", "16",
+               "--workdir", str(tmp_path)])
+    assert rc == 1
+
+
+# -------------------------------------------- accumulate path (kernels)
+
+def test_histogram_init_accumulates():
+    rng = np.random.default_rng(0)
+    ids1 = rng.integers(0, 32, 500).astype(np.int32)
+    ids2 = rng.integers(0, 32, 700).astype(np.int32)
+    h1 = histogram(jnp.asarray(ids1), 32, backend="xla")
+    h12 = histogram(jnp.asarray(ids2), 32, init=h1, backend="xla")
+    both = histogram(jnp.asarray(np.concatenate([ids1, ids2])), 32,
+                     backend="xla")
+    np.testing.assert_allclose(np.asarray(h12), np.asarray(both))
+
+
+def test_histogram_init_interpret_matches_xla():
+    rng = np.random.default_rng(1)
+    ids = rng.integers(-1, 64, 600).astype(np.int32)
+    w = rng.integers(1, 4, 600).astype(np.float32)
+    init = rng.integers(0, 9, 64).astype(np.float32)
+    a = histogram(jnp.asarray(ids), 64, jnp.asarray(w),
+                  init=jnp.asarray(init), backend="xla")
+    b = histogram(jnp.asarray(ids), 64, jnp.asarray(w),
+                  init=jnp.asarray(init), backend="interpret")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_windowed_histogram_init_accumulates():
+    rng = np.random.default_rng(2)
+    nw, nb = 4, 16
+    win = rng.integers(0, nw, 800).astype(np.int32)
+    ids = rng.integers(0, nb, 800).astype(np.int32)
+    acc = windowed_histogram(jnp.asarray(win[:400]), jnp.asarray(ids[:400]),
+                             nw, nb, backend="xla")
+    acc = windowed_histogram(jnp.asarray(win[400:]), jnp.asarray(ids[400:]),
+                             nw, nb, init=acc, backend="xla")
+    np.testing.assert_allclose(np.asarray(acc),
+                               ref_windowed_histogram(win, ids, nw, nb))
+
+
+def test_stream_activity_matches_oracle():
+    """The accumulated activity histogram == one-shot oracle over the
+    hashed original sources (the mergeable-domain contract)."""
+    src, dst, win, _ = _capture(n=1 << 10)
+    eng = _stream(src, dst, win, batch=256, ip_bins=64)
+    bins = np.asarray(mix32(jnp.asarray(src))).astype(np.int64) % 64
+    ref = ref_windowed_histogram(win, bins, 3, 64)
+    np.testing.assert_allclose(np.asarray(eng.state.activity), ref)
+
+
+# ----------------------------------------------------------------- CLI
+
+def test_stream_cli_smoke(tmp_path, capsys):
+    from repro.stream.run import main
+
+    rc = main(["--scale", "9", "--batches", "3", "--windows", "2",
+               "--ip-bins", "32", "--top-k", "3", "--snapshot-every", "1",
+               "--workdir", str(tmp_path)])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "14 max destination fan-in" in out
+    assert "steady state" in out
+    assert "all scalar queries match the NumPy oracle" in out

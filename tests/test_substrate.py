@@ -42,6 +42,105 @@ def test_plq_rejects_garbage(tmp_path):
         plq_info(p)
 
 
+def test_plq_chunks_partial_tail_row_group(tmp_path):
+    """Non-divisible row_group_size: a short tail group, exact per-chunk
+    slices, column subset + dtype preserved (the micro-batch contract the
+    streaming engine relies on)."""
+    n, rgs = 10_000, 3_000
+    cols = synthetic_packets(n, scale=12, seed=3)
+    p = str(tmp_path / "tail.plq")
+    write_plq(p, cols, row_group_size=rgs)
+    chunks = list(read_plq_chunks(p, ["src", "ts"]))
+    assert [len(c["src"]) for c in chunks] == [3_000, 3_000, 3_000, 1_000]
+    off = 0
+    for c in chunks:
+        assert list(c) == ["src", "ts"]  # requested columns, in order
+        for k in ("src", "ts"):
+            assert c[k].dtype == cols[k].dtype
+            np.testing.assert_array_equal(c[k], cols[k][off:off + len(c[k])])
+        off += len(c["src"])
+    assert off == n
+
+
+def test_plq_chunks_single_short_group(tmp_path):
+    """n < row_group_size: exactly one (partial) group holding everything."""
+    cols = synthetic_packets(500, scale=10, seed=4)
+    p = str(tmp_path / "short.plq")
+    write_plq(p, cols, row_group_size=4_096)
+    chunks = list(read_plq_chunks(p))
+    assert len(chunks) == 1
+    for k, v in cols.items():
+        np.testing.assert_array_equal(chunks[0][k], v)
+
+
+# --------------------------------------------------------------- prefetch
+
+def test_prefetcher_surfaces_error_before_queued_items_drain():
+    """Regression: a producer failure must surface on the *next* __next__,
+    not after up to ``depth`` already-queued batches drain."""
+    from repro.data.pipeline import Prefetcher
+
+    def gen():
+        yield 1
+        yield 2
+        yield 3
+        raise ValueError("producer died")
+
+    p = Prefetcher(gen(), depth=8)
+    p.join(timeout=5)          # producer has finished (and failed) for sure
+    with pytest.raises(ValueError, match="producer died"):
+        next(p)                # old behavior: returned queued item 1
+    with pytest.raises(ValueError, match="producer died"):
+        next(p)                # the error persists on subsequent calls
+
+
+def test_prefetcher_mid_stream_error_after_consumption():
+    import threading
+
+    from repro.data.pipeline import Prefetcher
+
+    consumed = threading.Event()
+
+    def gen():
+        yield "a"
+        consumed.wait(5)       # don't fail until the consumer has item 1
+        raise RuntimeError("boom")
+
+    p = Prefetcher(gen(), depth=2)
+    assert next(p) == "a"      # items consumed before the failure are fine
+    consumed.set()
+    p.join(timeout=5)
+    with pytest.raises(RuntimeError, match="boom"):
+        next(p)
+
+
+def test_prefetcher_normal_exhaustion():
+    from repro.data.pipeline import Prefetcher
+
+    p = Prefetcher(iter(range(5)), depth=2)
+    assert list(p) == [0, 1, 2, 3, 4]
+    with pytest.raises(StopIteration):  # stays exhausted, never blocks
+        next(p)
+
+
+def test_prefetcher_producer_thread_exits_on_error_with_full_queue():
+    """Regression: the producer must not block forever putting its done
+    sentinel when it fails while the queue is full (the fail-fast consumer
+    never drains the queued items)."""
+    from repro.data.pipeline import Prefetcher
+
+    def gen():
+        yield 1
+        yield 2          # fills the depth-2 queue
+        raise ValueError("late failure")
+
+    p = Prefetcher(gen(), depth=2)
+    p.join(timeout=5)
+    assert not p._t.is_alive(), "producer thread stuck on a full queue"
+    with pytest.raises(ValueError, match="late failure"):
+        next(p)
+
+
 def test_pcaplite_parsers_agree(tmp_path):
     cols = synthetic_packets(2_000, scale=10, seed=1)
     p = str(tmp_path / "x.pcpl")

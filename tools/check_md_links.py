@@ -1,0 +1,65 @@
+#!/usr/bin/env python3
+"""Check that intra-repo markdown links resolve to real files.
+
+Scans every tracked ``*.md`` file for inline links/images
+(``[text](target)``), skips external schemes (http/https/mailto) and
+pure-anchor links, resolves relative targets against the containing file,
+and fails listing every dangling link.  Stdlib only — runs in the CI
+``docs`` job (and anywhere: ``python tools/check_md_links.py``).
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# inline [text](target) / ![alt](target); target ends at ')' or ' "title"'
+_LINK = re.compile(r"!?\[[^\]]*\]\(\s*([^)\s]+)(?:\s+\"[^\"]*\")?\s*\)")
+_SKIP_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+_SKIP_DIRS = {".git", ".github", "__pycache__", ".pytest_cache", "node_modules"}
+
+
+def md_files(root: str):
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in _SKIP_DIRS]
+        for f in filenames:
+            if f.endswith(".md"):
+                yield os.path.join(dirpath, f)
+
+
+def strip_code(text: str) -> str:
+    """Drop fenced and inline code spans (links there are examples)."""
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    return re.sub(r"`[^`\n]*`", "", text)
+
+
+def check(root: str) -> int:
+    bad = []
+    n_links = 0
+    for path in sorted(md_files(root)):
+        with open(path, encoding="utf-8") as f:
+            text = strip_code(f.read())
+        for m in _LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(_SKIP_SCHEMES) or target.startswith("#"):
+                continue
+            n_links += 1
+            rel = target.split("#", 1)[0]  # drop fragment
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(path), rel)
+            )
+            if not os.path.exists(resolved):
+                bad.append(f"{os.path.relpath(path, root)}: "
+                           f"({target}) -> missing {os.path.relpath(resolved, root)}")
+    if bad:
+        print(f"{len(bad)} dangling markdown link(s):", file=sys.stderr)
+        for b in bad:
+            print(f"  {b}", file=sys.stderr)
+        return 1
+    print(f"all {n_links} intra-repo markdown links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.exit(check(sys.argv[1] if len(sys.argv) > 1 else repo_root))
