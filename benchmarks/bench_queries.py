@@ -2,19 +2,33 @@
 sequential NumPy oracle (the single-core "Pandas" role).
 
 Reports each of the challenge queries individually (as the paper's Fig. 1
-does), the all-14-queries pipeline, and the kernel-accelerated variants.
+does), the all-14-queries pipeline, and — with ``ab=True`` (CLI ``--ab``) —
+the sort-once plan vs the pre-plan implementation head-to-head
+(DESIGN.md §2.3), asserting query-for-query equality against the
+``core/ref.py`` oracle for both.
+
+Every row is also recorded machine-readably (steady-state us/call + the
+number of sort ops in the query's compiled HLO) and written to
+``BENCH_queries.json`` when a path is given — the trajectory file
+``benchmarks/run.py`` emits.
+
+    PYTHONPATH=src python -m benchmarks.bench_queries --ab [--n N] [--json P]
 """
 from __future__ import annotations
 
-import functools
+import argparse
+import json
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Table, run_all_queries
+from repro.core import Table, run_all_queries, run_all_queries_naive
 from repro.core import queries as Q
+from repro.core.plan import count_hlo_sorts
 from repro.core.ref import ref_run_all_queries, ref_traffic_matrix
+from repro.core.temporal import windowed_queries, windowed_queries_naive
 
 from .common import emit, packet_arrays, time_fn
 
@@ -39,7 +53,33 @@ QUERIES = {
 }
 
 
-def run(n: int = 1 << 20, iters: int = 3) -> None:
+def _hlo_sorts(jitted, *args) -> int:
+    """Sort ops in the compiled (post-CSE) HLO of ``jitted(*args)``."""
+    return count_hlo_sorts(jitted.lower(*args).compile().as_text())
+
+
+def _assert_oracle(res, ref: Dict[str, int], label: str) -> None:
+    bad = {k: (int(getattr(res, k)), v)
+           for k, v in ref.items() if int(getattr(res, k)) != v}
+    if bad:
+        raise AssertionError(f"{label} diverges from the NumPy oracle: {bad}")
+
+
+def run(
+    n: int = 1 << 20,
+    iters: int = 3,
+    ab: bool = False,
+    json_path: Optional[str] = None,
+) -> Dict[str, Dict[str, float]]:
+    rows: Dict[str, Dict[str, float]] = {}
+
+    def record(name, seconds, derived="", sorts=None):
+        emit(f"query/{name}", seconds, derived)
+        entry: Dict[str, float] = {"us_per_call": seconds * 1e6}
+        if sorts is not None:
+            entry["hlo_sorts"] = sorts
+        rows[name] = entry
+
     src, dst = packet_arrays(n)
     t = Table.from_dict({"src": jnp.asarray(src), "dst": jnp.asarray(dst)})
 
@@ -50,30 +90,78 @@ def run(n: int = 1 << 20, iters: int = 3) -> None:
         got = int(jf(t)) if np.ndim(jf(t)) == 0 else None
         want = refq(src, dst)
         ok = (got == want) if got is not None else True
-        emit(f"query/{name}", t_jax,
-             f"speedup_vs_numpy={t_ref / t_jax:.1f}x correct={ok}")
+        record(name, t_jax,
+               f"speedup_vs_numpy={t_ref / t_jax:.1f}x correct={ok}",
+               sorts=_hlo_sorts(jf, t))
 
     jall = jax.jit(run_all_queries)
     t_all = time_fn(jall, t, iters=iters)
     t_ref_all = time_fn(lambda: ref_run_all_queries(src, dst), iters=1)
-    res = jall(t)
     ref = ref_run_all_queries(src, dst)
-    ok = all(int(getattr(res, k)) == v for k, v in ref.items())
-    emit("query/all14_pipeline", t_all,
-         f"speedup_vs_numpy={t_ref_all / t_all:.1f}x correct={ok} n={n}")
+    _assert_oracle(jall(t), ref, "all14_plan")
+    record("all14_pipeline", t_all,
+           f"speedup_vs_numpy={t_ref_all / t_all:.1f}x correct=True n={n}",
+           sorts=_hlo_sorts(jall, t))
 
     # multi-temporal (Kepner et al. [14]): all stats × 16 windows, one pass
-    from repro.core.temporal import windowed_queries
-
     ts = jnp.asarray(np.sort(np.random.default_rng(0).integers(0, 1 << 20, n))
                      .astype(np.int32))
     tw = Table.from_dict({"src": jnp.asarray(src), "dst": jnp.asarray(dst),
                           "ts": ts})
     jwin = jax.jit(lambda t: windowed_queries(t, (1 << 20) // 16, 16))
     t_win = time_fn(jwin, tw, iters=iters)
-    emit("query/windowed16_pipeline", t_win,
-         f"16 windows fused, {t_win / t_all:.2f}x of single-window cost n={n}")
+    record("windowed16_pipeline", t_win,
+           f"16 windows fused, {t_win / t_all:.2f}x of single-window cost n={n}",
+           sorts=_hlo_sorts(jwin, tw))
+
+    if ab:
+        # ---- plan vs naive A/B: same scalars, same oracle, head-to-head ----
+        jnaive = jax.jit(run_all_queries_naive)
+        t_naive = time_fn(jnaive, t, iters=iters)
+        res_plan, res_naive = jall(t), jnaive(t)
+        _assert_oracle(res_naive, ref, "all14_naive")
+        for k in ref:
+            a, b = int(getattr(res_plan, k)), int(getattr(res_naive, k))
+            if a != b:
+                raise AssertionError(f"plan/naive mismatch on {k}: {a} != {b}")
+        record("all14_naive", t_naive,
+               f"plan_speedup={t_naive / t_all:.2f}x correct=True n={n}",
+               sorts=_hlo_sorts(jnaive, t))
+        jwin_naive = jax.jit(
+            lambda t: windowed_queries_naive(t, (1 << 20) // 16, 16))
+        t_win_naive = time_fn(jwin_naive, tw, iters=iters)
+        wa, wb = jwin(tw), jwin_naive(tw)
+        for k in wa:
+            if not np.array_equal(np.asarray(wa[k]), np.asarray(wb[k])):
+                raise AssertionError(f"windowed plan/naive mismatch on {k}")
+        record("windowed16_naive", t_win_naive,
+               f"plan_speedup={t_win_naive / t_win:.2f}x correct=True n={n}",
+               sorts=_hlo_sorts(jwin_naive, tw))
+
+    if json_path:
+        payload = {"n": n, "iters": iters, "ab": ab,
+                   "backend": jax.default_backend(), "rows": rows}
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"# wrote {json_path} ({len(rows)} rows)", flush=True)
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--n", type=int, default=1 << 20)
+    ap.add_argument("--quick", action="store_true", help="n = 2^14")
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--ab", action="store_true",
+                    help="plan-vs-naive A/B with equality asserts")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write machine-readable rows (BENCH_queries.json)")
+    args = ap.parse_args(argv)
+    n = (1 << 14) if args.quick else args.n
+    print("name,us_per_call,derived")
+    run(n=n, iters=args.iters, ab=args.ab, json_path=args.json)
+    return 0
 
 
 if __name__ == "__main__":
-    run()
+    raise SystemExit(main())

@@ -9,7 +9,13 @@ Emits ``name,us_per_call,derived`` CSV rows:
   distributed/*  beyond-paper     (shard_map pipeline at 8 shards)
   endtoend/*     paper pipeline   (per-phase + fused full-workload throughput)
 
-``python -m benchmarks.run [--quick] [--n N] [--only PREFIX]``
+The query section always writes its rows machine-readably (steady-state
+us/call + compiled-HLO sort counts per op) to ``--bench-json``
+(default ``BENCH_queries.json``) — the bench trajectory file; ``--ab`` adds
+the plan-vs-naive head-to-head rows (DESIGN.md §2.3).
+
+``python -m benchmarks.run [--quick] [--n N] [--only PREFIX] [--ab]
+[--bench-json PATH]``
 """
 from __future__ import annotations
 
@@ -23,6 +29,10 @@ def main() -> None:
     ap.add_argument("--n", type=int, default=1 << 20)
     ap.add_argument("--quick", action="store_true", help="n = 2^17")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--ab", action="store_true",
+                    help="query section: plan-vs-naive A/B rows")
+    ap.add_argument("--bench-json", default="BENCH_queries.json",
+                    help="machine-readable query rows (empty string disables)")
     args = ap.parse_args()
     n = (1 << 17) if args.quick else args.n
 
@@ -31,7 +41,8 @@ def main() -> None:
 
     sections = [
         ("io", lambda: bench_io.run(n=n)),
-        ("query", lambda: bench_queries.run(n=n)),
+        ("query", lambda: bench_queries.run(
+            n=n, ab=args.ab, json_path=args.bench_json or None)),
         ("graphblas", lambda: bench_graphblas.run(n=n)),
         ("anonymize", lambda: bench_anonymize.run(n=n)),
         ("kernel", bench_kernels.run),

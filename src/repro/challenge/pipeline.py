@@ -38,17 +38,22 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.anonymize import anonymize
-from ..core.ops import groupby_aggregate, mix32, semi_join, unique
+from ..core.ops import factorize, groupby_aggregate, mix32, semi_join, unique
+from ..core.plan import lead_fanout, lead_groups, link_groups, unique_lead
 from ..core.queries import (
     QueryResults,
     TopLinks,
     packet_weights,
-    run_all_queries,
+    run_all_queries_naive,
+    scalar_queries_from_plans,
+    table_plans,
     top_links,
+    top_links_from_plan,
     traffic_matrix,
+    unique_ips,
 )
 from ..core.table import Table
-from ..core.temporal import windowed_queries
+from ..core.temporal import windowed_queries, windowed_queries_naive
 from ..data import pcaplite
 from ..data.plq import read_plq, write_plq
 from ..data.rmat import synthetic_packets
@@ -60,6 +65,7 @@ __all__ = [
     "ChallengeResults",
     "ChallengeRun",
     "cross_window_ip_overlap",
+    "cross_window_ip_overlap_naive",
     "analyze",
     "distributed_scalar_queries",
     "run_challenge",
@@ -292,15 +298,55 @@ def build_table(src, dst, win, n_valid) -> Table:
 # ---------------------------------------------------------------------------
 
 def cross_window_ip_overlap(
-    t: Table, n_windows: int, backend: str = "auto"
+    t: Table, n_windows: int, backend: str = "auto",
+    ips: Optional[object] = None,
 ) -> jnp.ndarray:
     """overlap[w] = |distinct IPs active in window w AND window w-1|.
 
-    The cross-window persistence question from the multi-temporal analysis:
-    distinct (window, ip) pairs (one group-by over both endpoints), then a
-    semi-join of (w, ip) against (w'+1, ip), then one histogram dispatch to
-    count members per window.  overlap[0] == 0 by construction.
+    Sort-once form (DESIGN.md §2.3): every endpoint's rank in the sorted
+    distinct-IP domain (``unique_ips`` — the plan's one concat sort, shared
+    with the scalar suite when the caller passes ``ips``) is a binary
+    search, and per-window IP activity is a boolean presence grid
+    ``(n_windows + 1, ip_capacity + 1)`` scatter; adjacent-row AND + popcount
+    answers the persistence question with ZERO sorts beyond the shared one.
+    The pre-plan formulation re-sorted what the group-by had just sorted
+    (see :func:`cross_window_ip_overlap_naive`).  overlap[0] == 0 by
+    construction.  ``backend`` is accepted for signature compatibility; no
+    histogram dispatch remains on this path.
     """
+    del backend
+    if ips is None:
+        ips = unique_ips(t)
+    valid = t.valid_mask()
+    nw = n_windows
+    ip_cap = ips.values.shape[0]
+    # out-of-range window ids are DROPPED (dump row), matching the naive
+    # path's histogram semantics — not clamped into the edge windows
+    in_range = valid & (t["win"] >= 0) & (t["win"] < nw)
+    win = jnp.where(in_range, t["win"], nw)
+    r_src = factorize(t["src"], ips.values)
+    r_dst = factorize(t["dst"], ips.values)
+    grid = jnp.zeros((nw + 1, ip_cap + 1), jnp.bool_)
+    grid = grid.at[win, jnp.minimum(r_src, ip_cap)].set(True)
+    grid = grid.at[win, jnp.minimum(r_dst, ip_cap)].set(True)
+    live = grid[:nw, :ip_cap]
+    overlap = jnp.sum(live[1:] & live[:-1], axis=1, dtype=jnp.int32)
+    return jnp.concatenate([jnp.zeros((1,), jnp.int32), overlap])
+
+
+def cross_window_ip_overlap_naive(
+    t: Table, n_windows: int, backend: str = "auto"
+) -> jnp.ndarray:
+    """Pre-plan overlap: distinct (window, ip) pairs (one group-by over both
+    endpoints), then a semi-join of (w, ip) against (w'+1, ip) — which
+    re-sorts the rows the group-by just sorted — then one histogram dispatch
+    to count members per window.  A/B baseline for the plan path.
+
+    Window ids >= n_windows are dropped by the final histogram (identical to
+    the plan path).  A *negative* window id would leak into ``overlap[0]``
+    here via the w+1 shift, violating the documented overlap[0] == 0
+    contract — the plan path drops it instead; every in-repo caller clips
+    window ids upstream, so the two paths agree on all reachable inputs."""
     valid = t.valid_mask()
     win2 = jnp.concatenate([t["win"], t["win"]])
     ip2 = jnp.concatenate([t["src"], t["dst"]])
@@ -318,6 +364,20 @@ def cross_window_ip_overlap(
     return counts.astype(jnp.int32)
 
 
+def _window_activity(t: Table, n_windows: int, ip_bins: int, backend: str):
+    """Per-window source-activity histogram: every window through the Pallas
+    kernel in ONE dispatch (hashed ip -> bin sketch, exact per bin)."""
+    valid = t.valid_mask()
+    w = packet_weights(t)
+    act_ids = jnp.where(
+        valid, (mix32(t["src"]) % jnp.uint32(ip_bins)).astype(jnp.int32), -1
+    )
+    return windowed_histogram(
+        t["win"], act_ids, n_windows, ip_bins,
+        weights=jnp.where(valid, w, 0).astype(jnp.float32), backend=backend,
+    )
+
+
 def analyze(
     t: Table,
     *,
@@ -325,13 +385,59 @@ def analyze(
     ip_bins: int,
     k: int,
     backend: str = "auto",
+    use_plan: bool = True,
 ) -> ChallengeResults:
     """Every challenge statistic in one jit-able call.
 
-    XLA CSE shares the repeated (src, dst) sort across the scalar suite, the
-    vector queries and top-k — under jit this whole function is one program.
+    Sort-once query planning (DESIGN.md §2.3): the whole analyze phase runs
+    off THREE sorts — one packed src-leading (src, dst) sort, one mirrored
+    dst-leading sort, and the half-domain concat sort of ``unique_ips``.
+    Scalars, vector queries, fan-out/fan-in, top-k, the windowed suite and
+    the cross-window overlap all derive from that shared ``SortedEdges``
+    pair + sorted IP domain with zero additional sorts (asserted on the
+    lowered HLO in tests/test_plan.py).  ``use_plan=False`` runs the
+    pre-plan formulation — ~10 independent group-by sorts that XLA CSE can
+    only partially dedupe — as the A/B baseline; both paths return
+    bit-identical results.
     """
-    valid = t.valid_mask()
+    if not use_plan:
+        return _analyze_naive(
+            t, n_windows=n_windows, ip_bins=ip_bins, k=k, backend=backend
+        )
+    plans = table_plans(t)
+    plan_src, plan_dst = plans
+    ips = unique_ips(t)
+    links = link_groups(plan_src)
+    per_src = lead_groups(plan_src)
+    per_dst = lead_groups(plan_dst)
+    fanout = lead_fanout(plan_src)
+    fanin = lead_fanout(plan_dst)
+
+    return ChallengeResults(
+        scalars=scalar_queries_from_plans(
+            t, plan_src, plan_dst, ips, links=links, per_src=per_src,
+            per_dst=per_dst, fanout=fanout, fanin=fanin,
+        ),
+        links=links,
+        per_source=per_src,
+        per_destination=per_dst,
+        source_fanout=fanout,
+        destination_fanin=fanin,
+        unique_sources=unique_lead(plan_src),
+        unique_destinations=unique_lead(plan_dst),
+        top=top_links_from_plan(plan_src, k, links),
+        windowed=windowed_queries(t, 1, n_windows, ts_col="win", t0=0,
+                                  plans=plans),
+        window_activity=_window_activity(t, n_windows, ip_bins, backend),
+        window_ip_overlap=cross_window_ip_overlap(t, n_windows, ips=ips),
+    )
+
+
+def _analyze_naive(
+    t: Table, *, n_windows: int, ip_bins: int, k: int, backend: str
+) -> ChallengeResults:
+    """Pre-plan analyze: one group-by sort per query family, relying on XLA
+    CSE to dedupe what it structurally can."""
     w = packet_weights(t)
     links = traffic_matrix(t)
     per_src = groupby_aggregate(
@@ -343,18 +449,8 @@ def analyze(
     fanout = groupby_aggregate([links.keys[0]], None, n_valid=links.n_groups)
     fanin = groupby_aggregate([links.keys[1]], None, n_valid=links.n_groups)
 
-    # per-window source-activity histogram: every window through the Pallas
-    # kernel in ONE dispatch (hashed ip -> bin sketch, exact per bin)
-    act_ids = jnp.where(
-        valid, (mix32(t["src"]) % jnp.uint32(ip_bins)).astype(jnp.int32), -1
-    )
-    activity = windowed_histogram(
-        t["win"], act_ids, n_windows, ip_bins,
-        weights=jnp.where(valid, w, 0).astype(jnp.float32), backend=backend,
-    )
-
     return ChallengeResults(
-        scalars=run_all_queries(t),
+        scalars=run_all_queries_naive(t),
         links=links,
         per_source=per_src,
         per_destination=per_dst,
@@ -363,9 +459,9 @@ def analyze(
         unique_sources=unique(t["src"], n_valid=t.n_valid),
         unique_destinations=unique(t["dst"], n_valid=t.n_valid),
         top=top_links(t, k),
-        windowed=windowed_queries(t, 1, n_windows, ts_col="win", t0=0),
-        window_activity=activity,
-        window_ip_overlap=cross_window_ip_overlap(t, n_windows, backend),
+        windowed=windowed_queries_naive(t, 1, n_windows, ts_col="win", t0=0),
+        window_activity=_window_activity(t, n_windows, ip_bins, backend),
+        window_ip_overlap=cross_window_ip_overlap_naive(t, n_windows, backend),
     )
 
 
@@ -389,10 +485,11 @@ def run_challenge(
     kw = dict(n_windows=cfg.n_windows, ip_bins=cfg.ip_bins, k=cfg.top_k,
               backend=cfg.backend)
 
-    build_fn = jax.jit(
-        lambda s, d, wn, nv: (build_table(s, d, wn, nv),
-                              traffic_matrix(build_table(s, d, wn, nv)))
-    )
+    def _build(s, d, wn, nv):
+        table = build_table(s, d, wn, nv)  # build once; A_t groups the same
+        return table, traffic_matrix(table)
+
+    build_fn = jax.jit(_build)
     anon_fn = jax.jit(
         lambda t, k_: anonymize(t, k_, method=cfg.method, rounds=cfg.rounds)
     )

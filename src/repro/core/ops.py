@@ -19,7 +19,6 @@ sorted by ``(is_invalid, key0, key1, ...)``, which guarantees the first
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
@@ -27,7 +26,10 @@ import jax.numpy as jnp
 from jax import lax
 
 __all__ = [
+    "packable_keys",
+    "packed_key_words",
     "multi_key_sort",
+    "argmax_top_k",
     "segment_ids_from_sorted",
     "GroupResult",
     "groupby_aggregate",
@@ -52,6 +54,153 @@ def _validity_key(capacity: int, n_valid: jnp.ndarray) -> jnp.ndarray:
     return (jnp.arange(capacity, dtype=jnp.int32) >= n_valid).astype(jnp.int32)
 
 
+# -----------------------------------------------------------------------------
+# Packed-key sorting (DESIGN.md §2.3)
+#
+# A multi-operand ``lax.sort`` evaluates its lexicographic comparator once per
+# element pair, touching every key column.  When the keys are one or two
+# 32-bit integer columns they fit a single ``uint64`` word — int32 is biased
+# to unsigned (sign-bit flip, order-preserving), the leading key takes the
+# high word — and the whole sort becomes a SINGLE-operand ``lax.sort`` whose
+# comparator is one integer compare.  The validity discipline is preserved
+# without spending key bits on it:
+#
+#   * 1 key: the high word is free, so it carries the validity flag directly
+#     (exact for any validity mask — no collisions possible);
+#   * 2 keys: invalid rows are sent to ``UINT64_MAX``.  A *valid* row may
+#     also legitimately pack to ``UINT64_MAX`` (both keys at the dtype max).
+#     With prefix validity (``n_valid``) stability resolves the tie: valid
+#     rows precede the padding tail in the input, so the stable sort keeps
+#     them ahead of it.  With an arbitrary ``valid_mask`` the tie is instead
+#     repaired after the sort by a stable partition on the carried validity
+#     payload (one cumsum + scatter — O(n), not a second sort).
+#
+# 64-bit wrinkle: the default JAX config canonicalizes 64-bit *literals* away
+# even when a traced uint64 value is legal, so the pack/unpack never performs
+# uint64 arithmetic — words are assembled in uint32 and a
+# ``bitcast_convert_type`` inside ``jax.experimental.enable_x64()`` fuses
+# (n, 2) uint32 -> (n,) uint64 (XLA defines element 0 of the trailing dim as
+# the least-significant word).  Wider or non-32-bit key sets fall back to the
+# multi-operand comparator sort unchanged.
+# -----------------------------------------------------------------------------
+
+_PACKABLE_DTYPES = (jnp.dtype(jnp.int32), jnp.dtype(jnp.uint32))
+_U32_SIGN = jnp.uint32(0x80000000)
+_U32_MAX = jnp.uint32(0xFFFFFFFF)
+
+
+def packable_keys(keys: Sequence[jnp.ndarray]) -> bool:
+    """True iff ``keys`` fuse into a single uint64 sort key (<= 2 x 32-bit)."""
+    return 1 <= len(keys) <= 2 and all(
+        k.ndim == 1 and k.dtype in _PACKABLE_DTYPES for k in keys
+    )
+
+
+def _bias_u32(k: jnp.ndarray) -> jnp.ndarray:
+    """Order-preserving int32 -> uint32 bias (uint32 passes through)."""
+    if k.dtype == jnp.dtype(jnp.uint32):
+        return k
+    return lax.bitcast_convert_type(k, jnp.uint32) ^ _U32_SIGN
+
+
+def _unbias_u32(u: jnp.ndarray, dtype) -> jnp.ndarray:
+    if jnp.dtype(dtype) == jnp.dtype(jnp.uint32):
+        return u
+    return lax.bitcast_convert_type(u ^ _U32_SIGN, jnp.int32)
+
+
+def _fuse_u64(hi: jnp.ndarray, lo: jnp.ndarray) -> jnp.ndarray:
+    pair = jnp.stack([lo, hi], axis=-1)  # element 0 = least-significant word
+    with jax.experimental.enable_x64():
+        return lax.bitcast_convert_type(pair, jnp.uint64)
+
+
+def _split_u64(packed: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    with jax.experimental.enable_x64():
+        pair = lax.bitcast_convert_type(packed, jnp.uint32)
+    return pair[..., 1], pair[..., 0]
+
+
+def packed_key_words(
+    keys: Sequence[jnp.ndarray],
+    invalid: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(hi, lo) uint32 words of the fused key; ``invalid`` rows sort last.
+
+    The packing layout of DESIGN.md §2.3, exposed so future consumers can
+    binary-search or compare packed keys without sorting (the sort path
+    itself goes through :func:`multi_key_sort`).  See the 2-key caveat in
+    the section comment: with ``invalid`` set, a valid all-dtype-max 2-key
+    row collides with the invalid sentinel and needs the caller to resolve
+    the tie.
+    """
+    if not packable_keys(keys):
+        raise ValueError("packed_key_words requires 1-2 int32/uint32 keys")
+    if len(keys) == 1:
+        hi = (
+            jnp.zeros(keys[0].shape, jnp.uint32)
+            if invalid is None
+            else invalid.astype(jnp.uint32)
+        )
+        lo = _bias_u32(keys[0])
+    else:
+        hi = _bias_u32(keys[0])
+        lo = _bias_u32(keys[1])
+        if invalid is not None:
+            hi = jnp.where(invalid, _U32_MAX, hi)
+            lo = jnp.where(invalid, _U32_MAX, lo)
+    return hi, lo
+
+
+def _stable_partition_perm(valid: jnp.ndarray) -> jnp.ndarray:
+    """Gather permutation moving live rows to the prefix, order-preserving."""
+    cap = valid.shape[0]
+    n_valid = jnp.sum(valid).astype(jnp.int32)
+    live_pos = jnp.cumsum(valid.astype(jnp.int32)) - 1
+    dead_pos = n_valid + jnp.cumsum((~valid).astype(jnp.int32)) - 1
+    dest = jnp.where(valid, live_pos, dead_pos)
+    return jnp.zeros((cap,), jnp.int32).at[dest].set(
+        jnp.arange(cap, dtype=jnp.int32)
+    )
+
+
+def _packed_sort(
+    keys: Sequence[jnp.ndarray],
+    payloads: Sequence[jnp.ndarray],
+    n_valid: Optional[jnp.ndarray],
+    valid_mask: Optional[jnp.ndarray],
+) -> Tuple[Tuple[jnp.ndarray, ...], Tuple[jnp.ndarray, ...]]:
+    """Single-operand uint64 sort implementing the multi_key_sort contract."""
+    cap = keys[0].shape[0]
+    if valid_mask is not None:
+        invalid = ~valid_mask
+    elif n_valid is not None:
+        invalid = jnp.arange(cap, dtype=jnp.int32) >= n_valid
+    else:
+        invalid = None
+    hi, lo = packed_key_words(keys, invalid)
+    packed = _fuse_u64(hi, lo)
+    # 2-key + arbitrary mask is the one layout where a valid row can collide
+    # with the invalid sentinel — carry validity and repair post-sort.
+    repair = len(keys) == 2 and valid_mask is not None
+    operands = (packed, *payloads) + ((valid_mask,) if repair else ())
+    with jax.experimental.enable_x64():
+        out = lax.sort(operands, num_keys=1, is_stable=True)
+    packed, spayloads = out[0], out[1:]
+    shi, slo = _split_u64(packed)  # back to uint32 words before any gather —
+    # indexing a uint64 array outside enable_x64 would silently downcast
+    if repair:
+        *spayloads, svalid = spayloads
+        perm = _stable_partition_perm(svalid)
+        shi, slo = shi[perm], slo[perm]
+        spayloads = [p[perm] for p in spayloads]
+    if len(keys) == 1:
+        skeys = (_unbias_u32(slo, keys[0].dtype),)
+    else:
+        skeys = (_unbias_u32(shi, keys[0].dtype), _unbias_u32(slo, keys[1].dtype))
+    return skeys, tuple(spayloads)
+
+
 def multi_key_sort(
     keys: Sequence[jnp.ndarray],
     payloads: Sequence[jnp.ndarray] = (),
@@ -65,10 +214,19 @@ def multi_key_sort(
     buffers an ``all_to_all`` exchange produces — dist/relational.py); after
     sorting, live rows always form the prefix.  Returns (sorted_keys,
     sorted_payloads); the validity key is stripped from the output.
+
+    When the keys are one or two 32-bit integer columns the sort routes
+    through the packed single-operand uint64 path (DESIGN.md §2.3); the
+    result is identical on the live prefix (including payload stability).
+    The two paths may order the *garbage tail* differently — rows at
+    index >= n_valid are undefined either way, and in the packed 2-key path
+    the tail key slots unpack to the dtype max rather than sorted garbage.
     """
     keys = [jnp.asarray(k) for k in keys]
     payloads = [jnp.asarray(p) for p in payloads]
     cap = keys[0].shape[0]
+    if packable_keys(keys):
+        return _packed_sort(keys, payloads, n_valid, valid_mask)
     if n_valid is None and valid_mask is None:
         operands = (*keys, *payloads)
         out = lax.sort(operands, num_keys=len(keys), is_stable=True)
@@ -180,7 +338,9 @@ def groupby_aggregate(
     out_keys = tuple(_scatter_firsts(k, seg, first, cap) for k in skeys)
     aggs: Dict[str, jnp.ndarray] = {}
     counts = None
-    if count_name is not None or any(a == "mean" for _, a in values.values()):
+    if count_name is not None or any(
+        a in ("mean", "count") for _, a in values.values()
+    ):
         counts = jax.ops.segment_sum(
             valid.astype(jnp.int32), seg, num_segments=cap + 1
         )[:cap]
@@ -201,9 +361,7 @@ def groupby_aggregate(
                     s.dtype if jnp.issubdtype(s.dtype, jnp.floating) else jnp.float32
                 )
         elif agg == "count":
-            aggs[name] = jax.ops.segment_sum(
-                valid.astype(jnp.int32), seg, num_segments=cap + 1
-            )[:cap]
+            aggs[name] = counts  # group size — identical to the shared count
         elif agg == "max":
             ident = _min_ident(col.dtype)
             aggs[name] = jax.ops.segment_max(
@@ -399,6 +557,52 @@ def top_k(
     return (
         jnp.where(keep, vals, _min_ident(values.dtype)),
         jnp.where(keep, idx, 0).astype(jnp.int32),
+        n_live,
+    )
+
+
+def argmax_top_k(
+    values: jnp.ndarray,
+    k: int,
+    valid_mask: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Sort-free :func:`top_k`: ``k`` rounds of masked argmax.
+
+    ``lax.top_k`` lowers to a full-length sort on CPU/XLA, which would spoil
+    the sort-once query plan's HLO budget (DESIGN.md §2.3); for the small
+    static ``k`` of the challenge report an O(k*n) argmax loop emits no sort
+    op and returns the identical ``(vals, indices, n_live)`` triple —
+    argmax's first-max tie rule matches top_k's lowest-index rule, and
+    selected slots are retired to the dtype min.  Caveat: live values equal
+    to the dtype min are indistinguishable from retired slots, so this
+    variant requires ``values > dtype min`` on live rows (always true for
+    the non-negative counts/packet sums it is used on).
+    """
+    k = min(k, values.shape[0])
+    masked = values if valid_mask is None else jnp.where(
+        valid_mask, values, _min_ident(values.dtype)
+    )
+    ident = _min_ident(values.dtype)
+
+    def body(i, carry):
+        cur, vals, idx = carry
+        j = jnp.argmax(cur).astype(jnp.int32)
+        vals = vals.at[i].set(cur[j])
+        idx = idx.at[i].set(j)
+        return cur.at[j].set(ident), vals, idx
+
+    _, vals, idx = lax.fori_loop(
+        0, k, body,
+        (masked, jnp.full((k,), ident, values.dtype), jnp.zeros((k,), jnp.int32)),
+    )
+    n_live = jnp.asarray(
+        values.shape[0] if valid_mask is None else jnp.sum(valid_mask), jnp.int32
+    )
+    n_live = jnp.minimum(n_live, k)
+    keep = jnp.arange(k, dtype=jnp.int32) < n_live
+    return (
+        jnp.where(keep, vals, ident),
+        jnp.where(keep, idx, 0),
         n_live,
     )
 

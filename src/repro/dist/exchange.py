@@ -7,7 +7,10 @@ their owner shard through fixed-size per-peer buckets (DESIGN.md §5):
   * every valid row has an ``owner`` shard id (callers hash keys with
     :func:`repro.core.ops.mix32`);
   * rows are sorted by owner and scattered into a ``(n_shards, bucket)`` send
-    buffer, one bucket per peer;
+    buffer, one bucket per peer — the owner sort is a packed single-operand
+    uint64 sort (validity flag in the high word, owner id in the low word;
+    DESIGN.md §2.3), so the per-shard routing cost is one integer-key sort
+    rather than a (validity, owner) comparator sort;
   * ``lax.all_to_all`` swaps buckets; received rows carry an arbitrary
     validity *mask* (not a prefix) — exactly the layout
     :func:`repro.core.ops.groupby_aggregate` accepts via ``valid_mask``;
@@ -70,7 +73,9 @@ def exchange_by_owner(
 
     n_valid = jnp.sum(valid).astype(jnp.int32)
     row_idx = jnp.arange(cap, dtype=jnp.int32)
-    # sort rows by owner (valid prefix first) so each owner's rows are a run
+    # sort rows by owner (valid prefix first) so each owner's rows are a run;
+    # single-key int32 + mask routes through the packed uint64 sort exactly
+    # (the 1-key layout spends a spare word bit on validity — no collisions)
     (s_owner,), (s_row,) = multi_key_sort(
         [owner.astype(jnp.int32)], [row_idx], valid_mask=valid
     )

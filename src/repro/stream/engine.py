@@ -40,6 +40,7 @@ from ..challenge.pipeline import ChallengeResults
 from ..challenge.pipeline import analyze as challenge_analyze
 from ..challenge.pipeline import distributed_scalar_queries
 from ..core.ops import factorize, groupby_aggregate, isin, mix32, multi_key_sort
+from ..core.plan import unique_concat
 from ..core.table import Table
 from ..data.pipeline import Prefetcher
 from ..data.plq import read_plq_chunks
@@ -204,11 +205,14 @@ def update_state(
     # 1. persistent anonymization dictionary.  Batch-distinct IPs carry
     # their first-appearance position (row-major, src before dst) so new
     # ids follow first-seen order — invariant to micro-batch boundaries.
+    # Candidate extraction is the plan's packed concat sort
+    # (core/plan.unique_concat, DESIGN.md §2.3): one single-operand uint64
+    # sort over the compacted endpoint union, in place of the pre-plan
+    # 3-operand (validity, ip, pos) comparator sort over the masked concat.
     rows = jnp.arange(src.shape[0], dtype=jnp.int32)
-    bu = groupby_aggregate(
-        [jnp.concatenate([src, dst])],
-        {"first_pos": (jnp.concatenate([2 * rows, 2 * rows + 1]), "min")},
-        valid_mask=jnp.concatenate([valid, valid]),
+    bu = unique_concat(
+        src, dst, n_valid,
+        positions=jnp.concatenate([2 * rows, 2 * rows + 1]),
         count_name=None,
     )
     known = isin(bu.keys[0], state.ip_values, state.n_ips,
