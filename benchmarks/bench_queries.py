@@ -110,8 +110,12 @@ def run(
                           "ts": ts})
     jwin = jax.jit(lambda t: windowed_queries(t, (1 << 20) // 16, 16))
     t_win = time_fn(jwin, tw, iters=iters)
+    # since the CSR refactor (DESIGN.md §2.4) this row measures the sparse
+    # O(nnz)-memory scan — mark the formulation so trajectory readers can
+    # attribute the wall-time step; the grid A/B lives in BENCH_graphblas
     record("windowed16_pipeline", t_win,
-           f"16 windows fused, {t_win / t_all:.2f}x of single-window cost n={n}",
+           f"16 windows fused (method=csr), "
+           f"{t_win / t_all:.2f}x of single-window cost n={n}",
            sorts=_hlo_sorts(jwin, tw))
 
     if ab:

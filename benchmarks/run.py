@@ -12,10 +12,13 @@ Emits ``name,us_per_call,derived`` CSV rows:
 The query section always writes its rows machine-readably (steady-state
 us/call + compiled-HLO sort counts per op) to ``--bench-json``
 (default ``BENCH_queries.json``) — the bench trajectory file; ``--ab`` adds
-the plan-vs-naive head-to-head rows (DESIGN.md §2.3).
+the plan-vs-naive head-to-head rows (DESIGN.md §2.3).  The graphblas
+section likewise writes ``--graphblas-json`` (default
+``BENCH_graphblas.json``): the scipy-CSR reference plus the in-repo
+dense-grid vs CSR A/B with the compiled peak-HBM estimate (DESIGN.md §2.4).
 
 ``python -m benchmarks.run [--quick] [--n N] [--only PREFIX] [--ab]
-[--bench-json PATH]``
+[--bench-json PATH] [--graphblas-json PATH]``
 """
 from __future__ import annotations
 
@@ -33,6 +36,9 @@ def main() -> None:
                     help="query section: plan-vs-naive A/B rows")
     ap.add_argument("--bench-json", default="BENCH_queries.json",
                     help="machine-readable query rows (empty string disables)")
+    ap.add_argument("--graphblas-json", default="BENCH_graphblas.json",
+                    help="machine-readable graphblas A/B rows "
+                         "(empty string disables)")
     args = ap.parse_args()
     n = (1 << 17) if args.quick else args.n
 
@@ -43,7 +49,8 @@ def main() -> None:
         ("io", lambda: bench_io.run(n=n)),
         ("query", lambda: bench_queries.run(
             n=n, ab=args.ab, json_path=args.bench_json or None)),
-        ("graphblas", lambda: bench_graphblas.run(n=n)),
+        ("graphblas", lambda: bench_graphblas.run(
+            n=n, json_path=args.graphblas_json or None)),
         ("anonymize", lambda: bench_anonymize.run(n=n)),
         ("kernel", bench_kernels.run),
         ("distributed", bench_distributed.run),

@@ -67,6 +67,7 @@ __all__ = [
     "cross_window_ip_overlap",
     "cross_window_ip_overlap_naive",
     "analyze",
+    "analyze_peak_buffer_bytes",
     "distributed_scalar_queries",
     "run_challenge",
 ]
@@ -299,20 +300,27 @@ def build_table(src, dst, win, n_valid) -> Table:
 
 def cross_window_ip_overlap(
     t: Table, n_windows: int, backend: str = "auto",
-    ips: Optional[object] = None,
+    ips: Optional[object] = None, method: str = "scan",
 ) -> jnp.ndarray:
     """overlap[w] = |distinct IPs active in window w AND window w-1|.
 
     Sort-once form (DESIGN.md §2.3): every endpoint's rank in the sorted
     distinct-IP domain (``unique_ips`` — the plan's one concat sort, shared
     with the scalar suite when the caller passes ``ips``) is a binary
-    search, and per-window IP activity is a boolean presence grid
-    ``(n_windows + 1, ip_capacity + 1)`` scatter; adjacent-row AND + popcount
-    answers the persistence question with ZERO sorts beyond the shared one.
-    The pre-plan formulation re-sorted what the group-by had just sorted
-    (see :func:`cross_window_ip_overlap_naive`).  overlap[0] == 0 by
-    construction.  ``backend`` is accepted for signature compatibility; no
-    histogram dispatch remains on this path.
+    search, so per-window IP activity is a boolean presence vector over IP
+    ranks and adjacent-window AND + popcount answers the persistence
+    question with ZERO sorts beyond the shared one.  The pre-plan
+    formulation re-sorted what the group-by had just sorted (see
+    :func:`cross_window_ip_overlap_naive`).  overlap[0] == 0 by
+    construction.
+
+    ``method="scan"`` (default, DESIGN.md §2.4) walks the window axis with
+    a ``lax.scan`` carrying ONE window's presence vector — O(ip_capacity)
+    peak memory; ``method="grid"`` scatters the full
+    ``(n_windows + 1, ip_capacity + 1)`` presence grid at once — the dense
+    A/B baseline, O(n_windows × ip_capacity) peak, bit-identical results.
+    ``backend`` is accepted for signature compatibility; no histogram
+    dispatch remains on this path.
     """
     del backend
     if ips is None:
@@ -324,14 +332,30 @@ def cross_window_ip_overlap(
     # path's histogram semantics — not clamped into the edge windows
     in_range = valid & (t["win"] >= 0) & (t["win"] < nw)
     win = jnp.where(in_range, t["win"], nw)
-    r_src = factorize(t["src"], ips.values)
-    r_dst = factorize(t["dst"], ips.values)
-    grid = jnp.zeros((nw + 1, ip_cap + 1), jnp.bool_)
-    grid = grid.at[win, jnp.minimum(r_src, ip_cap)].set(True)
-    grid = grid.at[win, jnp.minimum(r_dst, ip_cap)].set(True)
-    live = grid[:nw, :ip_cap]
-    overlap = jnp.sum(live[1:] & live[:-1], axis=1, dtype=jnp.int32)
-    return jnp.concatenate([jnp.zeros((1,), jnp.int32), overlap])
+    r_src = jnp.minimum(factorize(t["src"], ips.values), ip_cap)
+    r_dst = jnp.minimum(factorize(t["dst"], ips.values), ip_cap)
+    if method == "grid":
+        grid = jnp.zeros((nw + 1, ip_cap + 1), jnp.bool_)
+        grid = grid.at[win, r_src].set(True)
+        grid = grid.at[win, r_dst].set(True)
+        live = grid[:nw, :ip_cap]
+        overlap = jnp.sum(live[1:] & live[:-1], axis=1, dtype=jnp.int32)
+        return jnp.concatenate([jnp.zeros((1,), jnp.int32), overlap])
+    if method != "scan":
+        raise ValueError(f"unknown overlap method {method!r}")
+
+    def one_window(prev, w):
+        cur = jnp.zeros((ip_cap + 1,), jnp.bool_)
+        cur = cur.at[jnp.where(win == w, r_src, ip_cap)].set(True)
+        cur = cur.at[jnp.where(win == w, r_dst, ip_cap)].set(True)
+        cur = cur[:ip_cap]
+        return cur, jnp.sum(prev & cur, dtype=jnp.int32)
+
+    _, overlap = jax.lax.scan(
+        one_window, jnp.zeros((ip_cap,), jnp.bool_),
+        jnp.arange(nw, dtype=jnp.int32),
+    )
+    return overlap
 
 
 def cross_window_ip_overlap_naive(
@@ -386,6 +410,7 @@ def analyze(
     k: int,
     backend: str = "auto",
     use_plan: bool = True,
+    windowed_method: str = "csr",
 ) -> ChallengeResults:
     """Every challenge statistic in one jit-able call.
 
@@ -395,10 +420,13 @@ def analyze(
     Scalars, vector queries, fan-out/fan-in, top-k, the windowed suite and
     the cross-window overlap all derive from that shared ``SortedEdges``
     pair + sorted IP domain with zero additional sorts (asserted on the
-    lowered HLO in tests/test_plan.py).  ``use_plan=False`` runs the
-    pre-plan formulation — ~10 independent group-by sorts that XLA CSE can
-    only partially dedupe — as the A/B baseline; both paths return
-    bit-identical results.
+    lowered HLO in tests/test_plan.py).  The windowed suite defaults to the
+    sparse CSR formulation (DESIGN.md §2.4, O(nnz) peak memory);
+    ``windowed_method="grid"`` keeps the dense-scatter A/B baseline
+    (O(n_windows × capacity) peak).  ``use_plan=False`` runs the pre-plan
+    formulation — ~10 independent group-by sorts that XLA CSE can only
+    partially dedupe — as the A/B baseline; all paths return bit-identical
+    results.
     """
     if not use_plan:
         return _analyze_naive(
@@ -427,9 +455,12 @@ def analyze(
         unique_destinations=unique_lead(plan_dst),
         top=top_links_from_plan(plan_src, k, links),
         windowed=windowed_queries(t, 1, n_windows, ts_col="win", t0=0,
-                                  plans=plans),
+                                  plans=plans, method=windowed_method),
         window_activity=_window_activity(t, n_windows, ip_bins, backend),
-        window_ip_overlap=cross_window_ip_overlap(t, n_windows, ips=ips),
+        window_ip_overlap=cross_window_ip_overlap(
+            t, n_windows, ips=ips,
+            method="scan" if windowed_method == "csr" else "grid",
+        ),
     )
 
 
@@ -463,6 +494,37 @@ def _analyze_naive(
         window_activity=_window_activity(t, n_windows, ip_bins, backend),
         window_ip_overlap=cross_window_ip_overlap_naive(t, n_windows, backend),
     )
+
+
+def analyze_peak_buffer_bytes(
+    capacity: int,
+    *,
+    windowed_method: str,
+    n_windows: int,
+    ip_bins: int = 1024,
+    k: int = 10,
+    n_valid: Optional[int] = None,
+) -> float:
+    """Compiled-HLO peak-buffer estimate of :func:`analyze` at a capacity.
+
+    Compile-only (nothing executes): lowers ``analyze`` over a zero table
+    and feeds the post-optimization HLO to
+    ``launch/hloanalysis.peak_buffer_bytes``.  The ONE definition of the
+    memory-gate harness — ``benchmarks/bench_graphblas.py`` (the CI smoke)
+    and ``tests/test_memory_budget.py`` (the pinned scale-17 gate) both
+    call it, so the two gates measure the same program.
+    """
+    from ..launch.hloanalysis import peak_buffer_bytes
+
+    t = Table.from_dict(
+        {c: np.zeros(capacity, np.int32) for c in ("src", "dst", "win")},
+        n_valid=capacity - 1 if n_valid is None else n_valid,
+    )
+    f = jax.jit(lambda t: analyze(
+        t, n_windows=n_windows, ip_bins=ip_bins, k=k, backend="xla",
+        windowed_method=windowed_method,
+    ))
+    return peak_buffer_bytes(f.lower(t).compile().as_text())
 
 
 # ---------------------------------------------------------------------------

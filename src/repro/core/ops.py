@@ -29,6 +29,8 @@ __all__ = [
     "packable_keys",
     "packed_key_words",
     "multi_key_sort",
+    "masked_max",
+    "clamp_k",
     "argmax_top_k",
     "segment_ids_from_sorted",
     "GroupResult",
@@ -455,6 +457,28 @@ def factorize(
     return jnp.searchsorted(sorted_uniques, x, side="left").astype(jnp.int32)
 
 
+def masked_max(values: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Max over the masked entries with a zero floor.
+
+    The suite-wide convention for tail-padded aggregate buffers: the
+    statistics are non-negative counts/sums, so an all-masked buffer
+    reports 0 (not the dtype min).  Shared by the scalar queries, the
+    windowed suites and the distributed merge — one definition, one
+    empty-input rule.
+    """
+    return jnp.max(jnp.where(mask, values, 0))
+
+
+def clamp_k(k: int, capacity: int) -> int:
+    """``min(k, capacity)`` — the static top-k clamp.
+
+    ``lax.top_k`` rejects k > buffer length, so every top-k entry point
+    clamps identically; centralising it keeps the output shapes of the
+    plan/naive paths in step.
+    """
+    return min(k, capacity)
+
+
 # -----------------------------------------------------------------------------
 # Membership / semi-join / top-k (the end-to-end pipeline's extra vocabulary)
 # -----------------------------------------------------------------------------
@@ -544,7 +568,7 @@ def top_k(
     ``n_live = min(k, #valid)`` hold the dtype min and index 0.  ``k`` is
     clamped to the buffer capacity (lax.top_k rejects k > len).
     """
-    k = min(k, values.shape[0])
+    k = clamp_k(k, values.shape[0])
     masked = values if valid_mask is None else jnp.where(
         valid_mask, values, _min_ident(values.dtype)
     )
@@ -578,7 +602,7 @@ def argmax_top_k(
     variant requires ``values > dtype min`` on live rows (always true for
     the non-negative counts/packet sums it is used on).
     """
-    k = min(k, values.shape[0])
+    k = clamp_k(k, values.shape[0])
     masked = values if valid_mask is None else jnp.where(
         valid_mask, values, _min_ident(values.dtype)
     )

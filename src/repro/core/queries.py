@@ -10,6 +10,14 @@ packet sums, exactly as the paper's
 Each query mirrors one paper Table III row (matrix / summation / data-science
 notation reproduced in the docstrings).  Destination-side queries are the
 ``src``/``dst`` swap per the paper's note.
+
+Two equivalent formulations are exposed (bit-identical, same 3-sort
+budget): the data-science group-by forms, and — since DESIGN.md §2.4 — the
+GraphBLAS matrix language over :class:`repro.core.sparse.CsrMatrix`
+(:func:`traffic_matrix_csr`, :func:`run_all_queries_csr`: ``1^T A 1``,
+``|A|_0``, ``A·1``, ``|A|_0·1`` as CSR reductions).  The per-window maxima
+speak the same language in :mod:`repro.core.temporal` — per-window value
+slices over the shared CSR skeleton, reduced one window at a time.
 """
 from __future__ import annotations
 
@@ -23,7 +31,9 @@ from .ops import (
     GroupResult,
     UniqueResult,
     argmax_top_k,
+    clamp_k,
     groupby_aggregate,
+    masked_max,
     top_k,
     unique,
 )
@@ -35,6 +45,7 @@ from .plan import (
     plan_for_table,
     unique_concat,
 )
+from .sparse import CsrMatrix, csr_from_plan, degrees, reduce_rows
 from .table import Table
 
 __all__ = [
@@ -42,6 +53,10 @@ __all__ = [
     "top_links",
     "top_links_from_plan",
     "table_plans",
+    "table_csrs",
+    "traffic_matrix_csr",
+    "scalar_queries_from_csrs",
+    "run_all_queries_csr",
     "scalar_queries_from_plans",
     "packet_weights",
     "traffic_matrix",
@@ -187,7 +202,7 @@ def top_links(t: Table, k: int) -> TopLinks:
     lowest index.
     """
     g = traffic_matrix(t)
-    k = min(k, t.capacity)  # top_k clamps identically; keep shapes in step
+    k = clamp_k(k, t.capacity)  # top_k clamps identically; keep shapes in step
     pk, idx, n_live = top_k(g.aggs["packets"], k, g.mask())
     keep = jnp.arange(k, dtype=jnp.int32) < n_live
     return TopLinks(
@@ -209,7 +224,7 @@ def top_links_from_plan(
     buffer.
     """
     g = link_groups(plan) if links is None else links
-    k = min(k, plan.capacity)
+    k = clamp_k(k, plan.capacity)
     pk, idx, n_live = argmax_top_k(g.aggs["packets"], k, g.mask())
     keep = jnp.arange(k, dtype=jnp.int32) < n_live
     return TopLinks(
@@ -277,8 +292,74 @@ def table_plans(t: Table) -> Tuple[SortedEdges, SortedEdges]:
     return plan_for_table(t, "src", "dst"), plan_for_table(t, "dst", "src")
 
 
-def _masked_max(values: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
-    return jnp.max(jnp.where(mask, values, 0))
+# --- the matrix-language (GraphBLAS-lite CSR) formulation ---------------------
+
+def traffic_matrix_csr(
+    t: Table, plan: Optional[SortedEdges] = None
+) -> CsrMatrix:
+    """A_t as a static-shape CSR (rows = src, cols = dst, vals = packets).
+
+    The sparse-first form of :func:`traffic_matrix` — same one packed sort
+    (zero when ``plan`` is shared), but the result carries row pointers, so
+    fan-out is a pointer difference and every per-source statistic is a row
+    reduction (DESIGN.md §2.4).
+    """
+    return csr_from_plan(plan_for_table(t) if plan is None else plan)
+
+
+def table_csrs(
+    t: Table, plans: Optional[Tuple[SortedEdges, SortedEdges]] = None
+) -> Tuple[CsrMatrix, CsrMatrix]:
+    """(A_t, A_t^T) as CSRs off the shared plan pair — zero extra sorts."""
+    plan_src, plan_dst = table_plans(t) if plans is None else plans
+    return csr_from_plan(plan_src), csr_from_plan(plan_dst)
+
+
+def scalar_queries_from_csrs(
+    t: Table,
+    csr_src: CsrMatrix,
+    csr_dst: CsrMatrix,
+    ips: Optional[UniqueResult] = None,
+) -> QueryResults:
+    """All ten Table III scalars in matrix language over the CSR pair.
+
+    Each line is the paper's GraphBLAS formulation, verbatim: 1^T A 1 /
+    |A|_0 / max(A) / A·1 / |A|_0·1 and the transpose mirrors — computed as
+    CSR reductions (``reduce_rows``, ``degrees``) with zero sorts beyond
+    the plans the CSRs came from.  Bit-identical to the group-by forms.
+    """
+    if ips is None:
+        ips = unique_ips(t)
+    out_pk = reduce_rows(csr_src, "plus")       # A·1
+    in_pk = reduce_rows(csr_dst, "plus")        # 1^T·A (transpose rows)
+    fanout = degrees(csr_src)                   # |A|_0·1
+    fanin = degrees(csr_dst)                    # 1^T·|A|_0
+    src_mask = csr_src.row_mask()
+    dst_mask = csr_dst.row_mask()
+    return QueryResults(
+        valid_packets=jnp.sum(                  # 1^T A 1
+            jnp.where(csr_src.entry_mask(), csr_src.vals, 0)
+        ),
+        unique_links=csr_src.nnz,               # |A|_0
+        max_link_packets=masked_max(csr_src.vals, csr_src.entry_mask()),
+        n_unique_sources=csr_src.n_rows,        # |A 1|_0 support
+        n_unique_destinations=csr_dst.n_rows,
+        n_unique_ips=ips.n_unique,
+        max_source_packets=masked_max(out_pk, src_mask),
+        max_source_fanout=masked_max(fanout, src_mask),
+        max_destination_packets=masked_max(in_pk, dst_mask),
+        max_destination_fanin=masked_max(fanin, dst_mask),
+    )
+
+
+def run_all_queries_csr(
+    t: Table, plans: Optional[Tuple[SortedEdges, SortedEdges]] = None
+) -> QueryResults:
+    """:func:`run_all_queries` through the CSR matrix language — the same
+    3-sort budget (two plans + the ``unique_ips`` concat), bit-identical
+    scalars, exercised head-to-head by ``benchmarks/bench_graphblas.py``."""
+    csr_src, csr_dst = table_csrs(t, plans)
+    return scalar_queries_from_csrs(t, csr_src, csr_dst)
 
 
 def scalar_queries_from_plans(
@@ -311,14 +392,14 @@ def scalar_queries_from_plans(
     return QueryResults(
         valid_packets=valid_packets(t),
         unique_links=links.n_groups,
-        max_link_packets=_masked_max(links.aggs["packets"], links.mask()),
+        max_link_packets=masked_max(links.aggs["packets"], links.mask()),
         n_unique_sources=per_src.n_groups,
         n_unique_destinations=per_dst.n_groups,
         n_unique_ips=ips.n_unique,
-        max_source_packets=_masked_max(per_src.aggs["packets"], per_src.mask()),
-        max_source_fanout=_masked_max(fanout.aggs["count"], fanout.mask()),
-        max_destination_packets=_masked_max(per_dst.aggs["packets"], per_dst.mask()),
-        max_destination_fanin=_masked_max(fanin.aggs["count"], fanin.mask()),
+        max_source_packets=masked_max(per_src.aggs["packets"], per_src.mask()),
+        max_source_fanout=masked_max(fanout.aggs["count"], fanout.mask()),
+        max_destination_packets=masked_max(per_dst.aggs["packets"], per_dst.mask()),
+        max_destination_fanin=masked_max(fanin.aggs["count"], fanin.mask()),
     )
 
 

@@ -6,14 +6,25 @@ analysis of 100,000,000,000 packets" paper the queries come from studies how
 the statistics *scale across window sizes*.  In jaxdf terms a window is just
 one more group-by key — but it is a *small static* key (``n_windows`` is a
 compile-time constant), which the sort-once plan (DESIGN.md §2.3) exploits:
-instead of five ``(win, ...)``-leading full sorts, every per-window statistic
-derives from the two already-sorted plans by scatter-adding into
-``(n_windows + 1, capacity + 1)`` grids (the ``+1``s are the usual overflow
-dump slots).  Window w's links are exactly the plan's links restricted to the
-rows that fall in w, so presence/packet grids at (window x link) and
-(window x endpoint-group) granularity answer everything — zero sorts beyond
-the plans themselves, O(n_windows * capacity) scatter traffic in place of
-O(n_windows-many sort passes).
+window w's links are exactly the plan's links restricted to the rows that
+fall in w, so every per-window statistic derives from the two already-sorted
+plans with zero additional sorts.
+
+Two sort-free formulations are kept (DESIGN.md §2.4):
+
+  * **CSR path (default)** — the per-window traffic matrix A_w is a *values
+    slice over the shared CSR skeleton* (``core/sparse.csr_from_plan``):
+    masking the sorted stream to window w and segment-reducing yields A_w's
+    entry values and pattern on the same row pointers, and every statistic
+    is a CSR reduction.  Windows are visited by a ``lax.scan`` whose body
+    reuses O(capacity) buffers, so peak memory is **O(nnz)** — independent
+    of ``n_windows``.
+  * **dense-grid path** (``method="grid"``, the pre-CSR A/B baseline) —
+    scatter-adds into five ``(n_windows + 1, capacity + 1)`` grids; one
+    pass, but O(n_windows × capacity) peak memory.
+
+Both are bit-identical to each other and to the pre-plan
+``windowed_queries_naive`` (five ``(win, ...)``-leading full sorts).
 """
 from __future__ import annotations
 
@@ -41,15 +52,83 @@ def window_ids(ts: jnp.ndarray, window_len: int, t0=None) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# plan-based path: grids over the static window axis, zero extra sorts
+# plan-based CSR path (default): per-window values over the shared CSR
+# skeleton, scanned one window at a time — O(nnz) peak memory, zero sorts
 # ---------------------------------------------------------------------------
 
-def _side_stats(
+def _side_stats_csr(
     plan: SortedEdges, win: jnp.ndarray, n_windows: int
 ) -> Dict[str, jnp.ndarray]:
-    """Per-window stats of one plan side: distinct links, link packets,
-    per-leading-endpoint packets/uniques/fan-out.  ``win`` is the per-ORIGINAL-
-    row window id; the plan's ``row`` payload routes it to sorted rows."""
+    """Per-window stats of one plan side off per-window CSR segments.
+
+    The shared CSR skeleton (rows = leading endpoints, entries = links) is
+    built from the plan for free; for each window w, A_w's entry values are
+    the w-masked segment sums over that skeleton — a CSR with the same
+    pointers and a sliced value/pattern vector.  A ``lax.scan`` walks the
+    static window axis so only ONE window's O(capacity) value buffers are
+    live at a time (the dense-grid path materialises all of them at once).
+    """
+    cap = plan.capacity
+    valid = plan.valid_rows()
+    s_win = jnp.where(
+        valid, jnp.clip(win[plan.row], 0, n_windows - 1), n_windows
+    )
+    ones = valid.astype(jnp.int32)
+    w_live = jnp.where(valid, plan.w, 0)
+    # link -> leading-endpoint row id: the CSR skeleton's entry_rows(),
+    # already available on the plan without materialising the CSR buffers
+    # (csr_from_plan(plan).entry_rows() computes the identical map)
+    link2row = plan.link_to_k0()[:cap]
+
+    def one_window(carry, w):
+        in_w = s_win == w
+        rows_w = jnp.where(in_w, ones, 0)
+        pk_w = jnp.where(in_w, w_live, 0)
+        # A_w's entry values on the shared skeleton: per-link row counts
+        # (pattern) and packet sums (values) restricted to window w
+        link_cnt = jax.ops.segment_sum(rows_w, plan.seg, num_segments=cap + 1)[:cap]
+        link_pk = jax.ops.segment_sum(pk_w, plan.seg, num_segments=cap + 1)[:cap]
+        present = link_cnt > 0
+        # row-level reductions of A_w (per leading endpoint)
+        row_cnt = jax.ops.segment_sum(rows_w, plan.k0_seg, num_segments=cap + 1)[:cap]
+        row_pk = jax.ops.segment_sum(pk_w, plan.k0_seg, num_segments=cap + 1)[:cap]
+        # |A_w|_0·1 — degrees of the per-window pattern, reduced over rows
+        fan = jax.ops.segment_sum(
+            present.astype(jnp.int32), link2row, num_segments=cap + 1
+        )[:cap]
+        return carry, (
+            jnp.sum(present).astype(jnp.int32),        # |A_w|_0
+            jnp.max(link_pk),                          # max(A_w)
+            jnp.sum(row_cnt > 0).astype(jnp.int32),    # |A_w 1|_0 support
+            jnp.max(row_pk),                           # max(A_w 1)
+            jnp.max(fan),                              # max(|A_w|_0 1)
+            jnp.sum(pk_w),                             # 1^T A_w 1
+        )
+
+    _, (uniq_links, max_link_pk, n_uniq, max_pk, max_fan, packets) = jax.lax.scan(
+        one_window, 0, jnp.arange(n_windows, dtype=jnp.int32)
+    )
+    return {
+        "unique_links": uniq_links,
+        "max_link_packets": max_link_pk,
+        "n_unique": n_uniq,
+        "max_packets": max_pk,
+        "max_fanout": max_fan,
+        "valid_packets": packets,
+    }
+
+
+# ---------------------------------------------------------------------------
+# plan-based dense-grid path (A/B baseline): O(n_windows * capacity) grids
+# ---------------------------------------------------------------------------
+
+def _side_stats_grid(
+    plan: SortedEdges, win: jnp.ndarray, n_windows: int
+) -> Dict[str, jnp.ndarray]:
+    """Per-window stats of one plan side via dense scatter grids: distinct
+    links, link packets, per-leading-endpoint packets/uniques/fan-out.
+    ``win`` is the per-ORIGINAL-row window id; the plan's ``row`` payload
+    routes it to sorted rows."""
     cap = plan.capacity
     valid = plan.valid_rows()
     s_win = jnp.where(
@@ -89,10 +168,19 @@ def windowed_suite_from_plans(
     plan_dst: SortedEdges,
     win: jnp.ndarray,
     n_windows: int,
+    method: str = "csr",
 ) -> Dict[str, jnp.ndarray]:
-    """All scalar challenge statistics per window, off the shared plan pair."""
-    s = _side_stats(plan_src, win, n_windows)
-    d = _side_stats(plan_dst, win, n_windows)
+    """All scalar challenge statistics per window, off the shared plan pair.
+
+    ``method="csr"`` (default) scans per-window CSR segments — O(nnz) peak
+    memory; ``method="grid"`` is the dense-scatter A/B baseline —
+    O(n_windows × capacity) peak memory, bit-identical results.
+    """
+    if method not in ("csr", "grid"):
+        raise ValueError(f"unknown windowed method {method!r}")
+    stats = _side_stats_csr if method == "csr" else _side_stats_grid
+    s = stats(plan_src, win, n_windows)
+    d = stats(plan_dst, win, n_windows)
     return {
         "valid_packets": s["valid_packets"],
         "unique_links": s["unique_links"],
@@ -113,6 +201,7 @@ def windowed_queries(
     ts_col: str = "ts",
     t0=None,
     plans: Optional[Tuple[SortedEdges, SortedEdges]] = None,
+    method: str = "csr",
 ) -> Dict[str, jnp.ndarray]:
     """All scalar challenge statistics per time window.
 
@@ -127,6 +216,8 @@ def windowed_queries(
       plans: optional pre-built (src-leading, dst-leading) plan pair — the
         challenge ``analyze`` shares the suite-wide pair so the windowed
         statistics cost zero additional sorts.
+      method: ``"csr"`` (sparse default, O(nnz) memory) or ``"grid"`` (the
+        dense-scatter A/B baseline) — see :func:`windowed_suite_from_plans`.
 
     Returns a dict of (n_windows,) arrays:
       valid_packets, unique_links, max_link_packets, n_unique_sources,
@@ -140,7 +231,9 @@ def windowed_queries(
             sorted_edges(t["src"], t["dst"], weights=w, n_valid=t.n_valid),
             sorted_edges(t["dst"], t["src"], weights=w, n_valid=t.n_valid),
         )
-    return windowed_suite_from_plans(plans[0], plans[1], win, n_windows)
+    return windowed_suite_from_plans(
+        plans[0], plans[1], win, n_windows, method=method
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -8,15 +8,21 @@ variants for the DCN pod axis (compress.py).
 """
 from .anonymize import distributed_anonymize
 from .compress import psum_bf16, psum_int8
-from .exchange import exchange_by_owner, return_to_sender
-from .relational import distributed_queries, distributed_unique_count
+from .exchange import exchange_by_owner, exchange_csr, return_to_sender
+from .relational import (
+    distributed_queries,
+    distributed_queries_naive,
+    distributed_unique_count,
+)
 
 __all__ = [
     "distributed_anonymize",
     "psum_bf16",
     "psum_int8",
     "exchange_by_owner",
+    "exchange_csr",
     "return_to_sender",
     "distributed_queries",
+    "distributed_queries_naive",
     "distributed_unique_count",
 ]

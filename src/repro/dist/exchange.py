@@ -30,9 +30,15 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..compat import axis_size
-from ..core.ops import multi_key_sort, segment_ids_from_sorted
+from ..core.ops import mix32, multi_key_sort, segment_ids_from_sorted
+from ..core.sparse import CsrMatrix, from_coo
 
-__all__ = ["bucket_size", "exchange_by_owner", "return_to_sender"]
+__all__ = [
+    "bucket_size",
+    "exchange_by_owner",
+    "exchange_csr",
+    "return_to_sender",
+]
 
 
 def bucket_size(capacity: int, n_shards: int, overflow_factor: float) -> int:
@@ -106,6 +112,45 @@ def exchange_by_owner(
         .set(jnp.where(fits, s_slot, -1).astype(jnp.int32))
     )
     return tuple(recv_cols), recv_valid, slot, overflow
+
+
+def exchange_csr(
+    csr: CsrMatrix,
+    axis_name,
+    *,
+    overflow_factor: float = 2.0,
+) -> Tuple[CsrMatrix, jnp.ndarray]:
+    """Row-partition a local CSR across shards: every shard ends up owning
+    complete rows (DESIGN.md §2.4 / §5).
+
+    Each stored entry is routed to the owner shard of its *leading row key*
+    (``mix32`` hash), so all fragments of a row — one per contributing
+    shard — land on the same owner; the owner rebuilds its shard of the
+    global matrix with one duplicate-collapsing :func:`from_coo` (plus
+    monoid: coincident coordinates from different shards add).  Row counts,
+    nnz and row reductions of the owned CSRs are then globally exact under
+    ``psum``/``pmax`` — the key spaces are disjoint by construction.
+
+    Returns ``(owned_csr, overflow)``; ``overflow`` counts entries that
+    missed their per-peer bucket (skewed keys) plus owner-side drops —
+    reported, never silent, per the exchange contract.
+    """
+    n_shards = axis_size(axis_name)
+    rows = csr.entry_rows()
+    row_cols = [csr.entry_row_key(i, rows) for i in range(len(csr.row_keys))]
+    owner = (mix32(row_cols[0]) % jnp.uint32(n_shards)).astype(jnp.int32)
+    recv, recv_valid, _, ov = exchange_by_owner(
+        owner,
+        [*row_cols, csr.col_keys, csr.vals],
+        csr.entry_mask(),
+        axis_name,
+        overflow_factor=overflow_factor,
+    )
+    *r_rows, r_cols, r_vals = recv
+    owned, dropped = from_coo(
+        r_rows, r_cols, r_vals, valid_mask=recv_valid, op="plus"
+    )
+    return owned, ov + dropped
 
 
 def return_to_sender(

@@ -93,6 +93,12 @@ def histogram_pallas(
     in one dispatch.  Returns float32 counts of shape (num_bins,).
     """
     n = ids.shape[0]
+    if n == 0:
+        # zero row blocks would skip the kernel body (and its output-tile
+        # init), returning uninitialized memory — emit the identity directly
+        if init is None:
+            return jnp.zeros((num_bins,), jnp.float32)
+        return init.astype(jnp.float32)
     if weights is None:
         weights = jnp.ones((n,), jnp.float32)
     n_pad = -n % block_rows

@@ -25,8 +25,15 @@ from . import ref
 from .flash_attention import flash_attention, flash_attention_pallas
 from .histogram import histogram_pallas
 from .segment_matmul import segment_matmul_pallas
+from .segreduce import segment_max_pallas
 
-__all__ = ["histogram", "windowed_histogram", "segment_reduce", "attention"]
+__all__ = [
+    "histogram",
+    "windowed_histogram",
+    "segmented_reduce",
+    "segment_reduce",
+    "attention",
+]
 
 # One-hot matmul beats scatter only while S is modest; see DESIGN.md §2 and
 # the §2.2 napkin math (2·n·S flops vs ~12·n bytes of scatter traffic).
@@ -94,6 +101,41 @@ def windowed_histogram(
         fused, n_windows * num_bins, weights, init=flat_init, backend=backend
     )
     return flat.reshape(n_windows, num_bins)
+
+
+def segmented_reduce(
+    vals: jnp.ndarray,
+    seg_ids: jnp.ndarray,
+    num_segments: int,
+    *,
+    op: str = "sum",
+    init: Optional[jnp.ndarray] = None,
+    backend: str = "auto",
+) -> jnp.ndarray:
+    """1-D segmented reduction under a plus or max monoid — the reduction
+    behind the GraphBLAS-lite ``mxv``/``vxm`` of :mod:`repro.core.sparse`.
+
+    ``op="sum"`` is the histogram kernel with the values as weights (one-hot
+    matmul on the MXU); ``op="max"`` dispatches the VPU compare-select
+    kernel of :mod:`repro.kernels.segreduce` — MXU accumulation is additive,
+    so the max monoid needs its own kernel.  Empty segments yield the monoid
+    identity (0 / ``-inf``); ``init`` folds a running accumulator in the
+    same dispatch.  Returns float32 of shape ``(num_segments,)``.
+    """
+    if op == "sum":
+        return histogram(seg_ids, num_segments, vals, init=init, backend=backend)
+    if op != "max":
+        raise ValueError(f"unknown segmented-reduce op {op!r}")
+    if backend == "auto":
+        backend = "pallas" if (
+            jax.default_backend() == "tpu" and num_segments <= _MATMUL_SEGMENT_LIMIT
+        ) else "xla"
+    if backend == "xla":
+        return ref.ref_segmented_reduce(vals, seg_ids, num_segments, op, init)
+    return segment_max_pallas(
+        vals, seg_ids, num_segments, init=init,
+        interpret=(backend == "interpret"),
+    )
 
 
 def segment_reduce(

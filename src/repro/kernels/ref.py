@@ -10,7 +10,12 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-__all__ = ["ref_histogram", "ref_segment_matmul", "ref_attention"]
+__all__ = [
+    "ref_histogram",
+    "ref_segmented_reduce",
+    "ref_segment_matmul",
+    "ref_attention",
+]
 
 
 def ref_histogram(
@@ -30,6 +35,36 @@ def ref_histogram(
         jnp.where(ok, ids, num_bins),
         num_segments=num_bins + 1,
     )[:num_bins]
+
+
+def ref_segmented_reduce(
+    vals: jnp.ndarray,
+    seg_ids: jnp.ndarray,
+    num_segments: int,
+    op: str = "sum",
+    init: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """1-D segmented reduction under a plus or max monoid (float32).
+
+    ``out[s] = monoid-reduce over {vals[i] : seg_ids[i] == s}``, folded into
+    ``init`` when given.  Out-of-range ids are dropped.  Empty segments
+    yield the monoid identity: 0 for ``"sum"``, ``-inf`` for ``"max"`` —
+    the GraphBLAS-lite reduction semantics of :mod:`repro.core.sparse`.
+    """
+    ok = (seg_ids >= 0) & (seg_ids < num_segments)
+    seg = jnp.where(ok, seg_ids, num_segments)
+    v = vals.astype(jnp.float32)
+    if op == "sum":
+        out = jax.ops.segment_sum(
+            jnp.where(ok, v, 0.0), seg, num_segments=num_segments + 1
+        )[:num_segments]
+        return out if init is None else init.astype(jnp.float32) + out
+    if op == "max":
+        out = jax.ops.segment_max(
+            jnp.where(ok, v, -jnp.inf), seg, num_segments=num_segments + 1
+        )[:num_segments]
+        return out if init is None else jnp.maximum(init.astype(jnp.float32), out)
+    raise ValueError(f"unknown segmented-reduce op {op!r}")
 
 
 def ref_segment_matmul(

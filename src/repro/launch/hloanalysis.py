@@ -15,13 +15,18 @@ re-derives the numbers from the HLO text with loop trip counts applied:
 
 Used by launch/dryrun.py at compile time; also re-runnable offline on the
 gzip'd HLO the dry-run stores next to each cell's JSON.
+
+:func:`peak_buffer_bytes` adds the memory axis: an estimated peak of live
+HBM bytes from def-use liveness over the post-optimization module — the
+budget the CSR windowed path (DESIGN.md §2.4) is gated on
+(``benchmarks/bench_graphblas.py``, ``tests/test_memory_budget.py``).
 """
 from __future__ import annotations
 
 import re
 from typing import Dict, List, Optional, Tuple
 
-__all__ = ["analyze_hlo"]
+__all__ = ["analyze_hlo", "peak_buffer_bytes"]
 
 _DTYPE_BYTES = {
     "f64": 8, "s64": 8, "u64": 8, "c64": 8,
@@ -84,6 +89,93 @@ def _split_computations(hlo: str) -> Dict[str, List[str]]:
     if entry_name:
         comps["__entry__"] = comps[entry_name]
     return comps
+
+
+# ops whose result aliases (a slice of) an operand buffer — no allocation,
+# but they keep their operand alive for as long as their own result lives
+_ALIAS_OPS = ("get-tuple-element", "tuple", "bitcast", "after-all")
+_DEF_TYPED = re.compile(
+    r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"(\([^=]*?\)|[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"([a-z][a-z0-9\-]*)\("
+)
+
+
+def _liveness_peak(lines: List[str]) -> float:
+    """Peak live bytes of one computation from textual def-use liveness.
+
+    HLO computations are emitted in (a) topological order, which the
+    schedulers follow closely enough for a budget estimate: each def
+    allocates its result bytes, each buffer dies after its last textual
+    use.  Alias-only ops (tuple/GTE/bitcast) allocate nothing but extend
+    their operands' lifetimes.
+    """
+    defs: List[Tuple[int, str, float, str, List[str]]] = []
+    sizes: Dict[str, float] = {}
+    for i, ln in enumerate(lines):
+        m = _DEF_TYPED.match(ln)
+        if not m:
+            continue
+        name, type_str, opcode = m.group(1), m.group(2), m.group(3)
+        operands = re.findall(r"%([\w.\-]+)", ln.split("(", 1)[-1])
+        defs.append((i, name, _type_bytes(type_str), opcode, operands))
+        sizes[name] = _type_bytes(type_str)
+
+    last_use: Dict[str, int] = {}
+    for i, name, _, _, operands in defs:
+        last_use[name] = max(last_use.get(name, i), i)
+        for r in operands:
+            if r in sizes:
+                last_use[r] = max(last_use.get(r, 0), i)
+    # alias ops extend operand lifetimes to their own result's last use
+    for i, name, _, opcode, operands in reversed(defs):
+        if opcode in _ALIAS_OPS:
+            for r in operands:
+                if r in sizes:
+                    last_use[r] = max(last_use.get(r, 0), last_use.get(name, i))
+
+    # sweep: allocate at def, release after last use; alias ops cost 0
+    release: Dict[int, List[str]] = {}
+    for name, i in last_use.items():
+        release.setdefault(i, []).append(name)
+    live = peak = 0.0
+    for i, name, nbytes, opcode, _ in defs:
+        if opcode not in _ALIAS_OPS:
+            live += nbytes
+        else:
+            sizes[name] = 0.0
+        peak = max(peak, live)
+        for r in release.get(i, ()):
+            live -= sizes.get(r, 0.0)
+    return peak
+
+
+def peak_buffer_bytes(
+    hlo: str, comps: Optional[Dict[str, List[str]]] = None
+) -> float:
+    """Estimated peak live HBM bytes of a compiled (post-optimization) module.
+
+    Max of per-computation liveness peaks over the entry computation and
+    every loop body/condition; fusion bodies and reducers (reached via
+    ``calls=``/``to_apply=``) are excluded — their interiors never touch
+    HBM.  A deterministic *estimate*, not the compiler's buffer assignment:
+    its purpose is A/B budget gating (dense-grid vs CSR windowed state),
+    where both sides are measured identically.  ``comps`` lets a caller
+    that already split the module (``analyze_hlo``) skip the re-parse.
+    """
+    if comps is None:
+        comps = _split_computations(hlo)
+    inlined = set()
+    for lines in comps.values():
+        for ln in lines:
+            for ref in re.findall(r"(?:calls|to_apply)=%?([\w.\-]+)", ln):
+                inlined.add(ref)
+    peak = 0.0
+    for name, lines in comps.items():
+        if name == "__entry__" or name in inlined:
+            continue
+        peak = max(peak, _liveness_peak(lines))
+    return peak
 
 
 def analyze_hlo(hlo: str) -> dict:
@@ -234,6 +326,7 @@ def analyze_hlo(hlo: str) -> dict:
         "collective_bytes_total": sum(s["bytes"] for s in collectives.values()),
         "dot_flops": dot_flops,
         "hbm_bytes": hbm_bytes,
+        "peak_buffer_bytes": peak_buffer_bytes(hlo, comps=comps),
         "n_computations": len(comps) - 1,
         "n_while_loops": sum(len(v) for v in edges.values()),
     }

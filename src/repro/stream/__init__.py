@@ -19,6 +19,7 @@ from .engine import (
     steady_state,
     stream_plq,
     update_state,
+    update_state_naive,
 )
 from .state import StreamState, init_state
 
@@ -35,4 +36,5 @@ __all__ = [
     "steady_state",
     "stream_plq",
     "update_state",
+    "update_state_naive",
 ]

@@ -41,6 +41,7 @@ from ..challenge.pipeline import analyze as challenge_analyze
 from ..challenge.pipeline import distributed_scalar_queries
 from ..core.ops import factorize, groupby_aggregate, isin, mix32, multi_key_sort
 from ..core.plan import unique_concat
+from ..core.sparse import ewise_union, from_coo
 from ..core.table import Table
 from ..data.pipeline import Prefetcher
 from ..data.plq import read_plq_chunks
@@ -53,6 +54,7 @@ __all__ = [
     "StreamBatchTimings",
     "StreamSnapshot",
     "update_state",
+    "update_state_naive",
     "merge_states",
     "link_table",
     "anonymization_mapping",
@@ -184,31 +186,29 @@ def _merge_links(
     )
 
 
-def update_state(
+def _fold_dictionary_and_activity(
     state: StreamState,
     src: jnp.ndarray,
     dst: jnp.ndarray,
     win: jnp.ndarray,
+    valid: jnp.ndarray,
     n_valid: jnp.ndarray,
-    *,
-    backend: str = "auto",
-) -> StreamState:
-    """Fold one micro-batch (padded to ``batch_capacity``) into the state."""
-    n_windows, ip_bins = state.n_windows, state.ip_bins
-    n_valid = jnp.asarray(n_valid, jnp.int32)
-    src = src.astype(jnp.int32)
-    dst = dst.astype(jnp.int32)
-    win = jnp.clip(win.astype(jnp.int32), 0, n_windows - 1)
-    t = Table(columns={"src": src, "dst": dst}, n_valid=n_valid)
-    valid = t.valid_mask()
+    backend: str,
+):
+    """Steps 1 and 3 of the state transition, shared by both link paths.
 
-    # 1. persistent anonymization dictionary.  Batch-distinct IPs carry
-    # their first-appearance position (row-major, src before dst) so new
-    # ids follow first-seen order — invariant to micro-batch boundaries.
-    # Candidate extraction is the plan's packed concat sort
-    # (core/plan.unique_concat, DESIGN.md §2.3): one single-operand uint64
-    # sort over the compacted endpoint union, in place of the pre-plan
-    # 3-operand (validity, ip, pos) comparator sort over the masked concat.
+    1. persistent anonymization dictionary.  Batch-distinct IPs carry
+    their first-appearance position (row-major, src before dst) so new
+    ids follow first-seen order — invariant to micro-batch boundaries.
+    Candidate extraction is the plan's packed concat sort
+    (core/plan.unique_concat, DESIGN.md §2.3): one single-operand uint64
+    sort over the compacted endpoint union, in place of the pre-plan
+    3-operand (validity, ip, pos) comparator sort over the masked concat.
+
+    3. per-window activity accumulator (kernels.ops accumulate path).
+    Bins hash the ORIGINAL IP so independently built states merge by
+    addition; the (lossy) sketch does not expose ids — see DESIGN.md §6.
+    """
     rows = jnp.arange(src.shape[0], dtype=jnp.int32)
     bu = unique_concat(
         src, dst, n_valid,
@@ -218,12 +218,99 @@ def update_state(
     known = isin(bu.keys[0], state.ip_values, state.n_ips,
                  n_valid=bu.n_groups)
     new = bu.mask() & ~known
-    ip_values, ip_ids, n_ips, ov_ips = _merge_dictionary(
+    dictionary = _merge_dictionary(
         state.ip_values, state.ip_ids, state.n_ips,
         bu.keys[0], new, bu.aggs["first_pos"],
     )
+    act_ids = jnp.where(
+        valid, (mix32(src) % jnp.uint32(state.ip_bins)).astype(jnp.int32), -1
+    )
+    activity = windowed_histogram(
+        win, act_ids, state.n_windows, state.ip_bins,
+        weights=valid.astype(jnp.float32),
+        init=state.activity, backend=backend,
+    )
+    return dictionary, activity
 
-    # 2. accumulated windowed traffic matrix
+
+def update_state(
+    state: StreamState,
+    src: jnp.ndarray,
+    dst: jnp.ndarray,
+    win: jnp.ndarray,
+    n_valid: jnp.ndarray,
+    *,
+    backend: str = "auto",
+) -> StreamState:
+    """Fold one micro-batch (padded to ``batch_capacity``) into the state.
+
+    2. accumulated windowed traffic matrix: ONE ``core.sparse.from_coo``
+    over the state's CSR entries ++ the raw batch rows — duplicate collapse
+    under the plus monoid is simultaneously the batch's (win, src, dst)
+    group-by AND the upsert into the accumulated matrix, so the link path
+    costs one sort where the pre-CSR path (:func:`update_state_naive`)
+    paid two.  Overflow (groups beyond ``link_capacity``) is counted by
+    ``from_coo``, never silent.
+    """
+    n_windows = state.n_windows
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    src = src.astype(jnp.int32)
+    dst = dst.astype(jnp.int32)
+    win = jnp.clip(win.astype(jnp.int32), 0, n_windows - 1)
+    t = Table(columns={"src": src, "dst": dst}, n_valid=n_valid)
+    valid = t.valid_mask()
+
+    (ip_values, ip_ids, n_ips, ov_ips), activity = _fold_dictionary_and_activity(
+        state, src, dst, win, valid, n_valid, backend
+    )
+
+    links, ov_links = from_coo(
+        [jnp.concatenate([state.win, win]),
+         jnp.concatenate([state.src, src])],
+        jnp.concatenate([state.dst, dst]),
+        jnp.concatenate([state.packets, jnp.ones((src.shape[0],), jnp.int32)]),
+        valid_mask=jnp.concatenate([state.links.entry_mask(), valid]),
+        op="plus",
+        nnz_capacity=state.link_capacity,
+    )
+
+    return StreamState(
+        ip_values=ip_values, ip_ids=ip_ids, n_ips=n_ips,
+        links=links,
+        activity=activity,
+        n_packets=state.n_packets + n_valid,
+        n_batches=state.n_batches + 1,
+        overflow=state.overflow + ov_ips + ov_links,
+    )
+
+
+def update_state_naive(
+    state: StreamState,
+    src: jnp.ndarray,
+    dst: jnp.ndarray,
+    win: jnp.ndarray,
+    n_valid: jnp.ndarray,
+    *,
+    backend: str = "auto",
+) -> StreamState:
+    """Pre-CSR link path, kept as the A/B baseline: batch group-by, then a
+    second concat group-by merging it into the accumulated flat link table
+    (:func:`_merge_links`), then a pack into the CSR state layout.  Produces
+    a bit-identical ``StreamState`` to :func:`update_state` — asserted by
+    tests/test_stream.py — at one extra sort per batch.
+    """
+    n_windows = state.n_windows
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    src = src.astype(jnp.int32)
+    dst = dst.astype(jnp.int32)
+    win = jnp.clip(win.astype(jnp.int32), 0, n_windows - 1)
+    t = Table(columns={"src": src, "dst": dst}, n_valid=n_valid)
+    valid = t.valid_mask()
+
+    (ip_values, ip_ids, n_ips, ov_ips), activity = _fold_dictionary_and_activity(
+        state, src, dst, win, valid, n_valid, backend
+    )
+
     bl = groupby_aggregate(
         [win, src, dst],
         {"packets": (jnp.ones((src.shape[0],), jnp.int32), "sum")},
@@ -233,22 +320,12 @@ def update_state(
     w2, s2, d2, pk2, n_links, ov_links = _merge_links(
         state, bl.keys, bl.aggs["packets"], bl.mask()
     )
-
-    # 3. per-window activity accumulator (kernels.ops accumulate path).
-    # Bins hash the ORIGINAL IP so independently built states merge by
-    # addition; the (lossy) sketch does not expose ids — see DESIGN.md §6.
-    act_ids = jnp.where(
-        valid, (mix32(src) % jnp.uint32(ip_bins)).astype(jnp.int32), -1
-    )
-    activity = windowed_histogram(
-        win, act_ids, n_windows, ip_bins,
-        weights=valid.astype(jnp.float32),
-        init=state.activity, backend=backend,
-    )
+    # pack the (already distinct, lex-sorted) flat table into the CSR layout
+    links, _ = from_coo([w2, s2], d2, pk2, n_valid=n_links, op="plus")
 
     return StreamState(
         ip_values=ip_values, ip_ids=ip_ids, n_ips=n_ips,
-        win=w2, src=s2, dst=d2, packets=pk2, n_links=n_links,
+        links=links,
         activity=activity,
         n_packets=state.n_packets + n_valid,
         n_batches=state.n_batches + 1,
@@ -259,9 +336,12 @@ def update_state(
 def merge_states(a: StreamState, b: StreamState) -> StreamState:
     """Merge two independently built shard states (same capacities).
 
-    Exact for links, scalars and activity; ``b``'s IPs unknown to ``a`` get
-    fresh ids continuing ``a``'s sequence in ``b``'s first-seen order, so
-    the merge is associative/commutative up to id relabeling — see state.py.
+    Exact for links, scalars and activity: the accumulated matrices merge
+    by ``core.sparse.ewise_union`` under the plus monoid (coincident
+    ``(win, src, dst)`` coordinates add; overflow counted).  ``b``'s IPs
+    unknown to ``a`` get fresh ids continuing ``a``'s sequence in ``b``'s
+    first-seen order, so the merge is associative/commutative up to id
+    relabeling — see state.py.
     """
     if (a.link_capacity != b.link_capacity
             or a.ip_capacity != b.ip_capacity
@@ -277,13 +357,13 @@ def merge_states(a: StreamState, b: StreamState) -> StreamState:
     ip_values, ip_ids, n_ips, ov_ips = _merge_dictionary(
         a.ip_values, a.ip_ids, a.n_ips, b.ip_values, new, b.ip_ids
     )
-    b_valid = jnp.arange(b.link_capacity, dtype=jnp.int32) < b.n_links
-    w2, s2, d2, pk2, n_links, ov_links = _merge_links(
-        a, (b.win, b.src, b.dst), b.packets, b_valid
+    links, ov_links = ewise_union(
+        a.links, b.links, op="plus",
+        nnz_capacity=a.link_capacity, row_capacity=a.link_capacity,
     )
     return StreamState(
         ip_values=ip_values, ip_ids=ip_ids, n_ips=n_ips,
-        win=w2, src=s2, dst=d2, packets=pk2, n_links=n_links,
+        links=links,
         activity=a.activity + b.activity,
         n_packets=a.n_packets + b.n_packets,
         n_batches=a.n_batches + b.n_batches,

@@ -14,10 +14,16 @@ accumulator, all in the engine's static-shape discipline (DESIGN.md §3):
     next free ids in *first-appearance* order (row-major, src before dst),
     which makes the dictionary invariant to how the stream is cut into
     micro-batches.
-  * ``win``/``src``/``dst``/``packets``/``n_links`` — the accumulated
-    distinct ``(window, src, dst)`` link table with packet sums, keys in
-    the *original* IP domain (the pre-image the dictionary maps; queries
-    emit stable ids by gathering through the dictionary at snapshot time).
+  * ``links`` — the accumulated windowed traffic matrix as a static-shape
+    :class:`repro.core.sparse.CsrMatrix` (DESIGN.md §2.4): rows are the
+    distinct ``(window, src)`` pairs (a two-column row key), columns are
+    destinations, values are per-link packet sums.  Keys live in the
+    *original* IP domain (the pre-image the dictionary maps; queries emit
+    stable ids by gathering through the dictionary at snapshot time).
+    Batches fold in through ``core.sparse.from_coo`` and shard states merge
+    through ``core.sparse.ewise_union`` — the sort-based upsert.  The flat
+    ``win``/``src``/``dst``/``packets`` views (properties below) expand the
+    CSR back to entry granularity, bit-identical to the pre-CSR flat state.
   * ``activity`` — running per-window hashed-source histogram, folded
     per batch through the kernels.ops accumulate path (``init=``).  Bins
     hash the original IP (``mix32 % ip_bins``) so two independently built
@@ -33,7 +39,8 @@ accumulator, all in the engine's static-shape discipline (DESIGN.md §3):
 Merge contract (``engine.merge_states``): states merge associatively and
 commutatively *up to id relabeling* — the link content, the scalar suite,
 and the activity histogram are exactly the union; only the (necessarily
-arbitrary) id assignment depends on merge order.
+arbitrary) id assignment depends on merge order (property-tested by
+``tests/test_stream.py::test_merge_states_associative_commutative``).
 """
 from __future__ import annotations
 
@@ -42,7 +49,9 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-__all__ = ["StreamState", "init_state"]
+from ..core.sparse import CsrMatrix
+
+__all__ = ["StreamState", "init_state", "empty_links_csr"]
 
 _I32_MAX = jnp.iinfo(jnp.int32).max
 
@@ -55,12 +64,9 @@ class StreamState:
     ip_values: jnp.ndarray   # (ip_capacity,) int32 sorted asc, tail = int32 max
     ip_ids: jnp.ndarray      # (ip_capacity,) int32 stable id per ip_values slot
     n_ips: jnp.ndarray       # scalar int32
-    # accumulated windowed traffic matrix (original-IP keys)
-    win: jnp.ndarray         # (link_capacity,) int32, tail = int32 max
-    src: jnp.ndarray         # (link_capacity,) int32
-    dst: jnp.ndarray         # (link_capacity,) int32
-    packets: jnp.ndarray     # (link_capacity,) int32 per-link packet sums
-    n_links: jnp.ndarray     # scalar int32
+    # accumulated windowed traffic matrix (original-IP keys), CSR form:
+    # rows = distinct (window, src), cols = dst, vals = packet sums
+    links: CsrMatrix
     # running per-window activity histogram (hashed original-IP bins)
     activity: jnp.ndarray    # (n_windows, ip_bins) float32
     # totals
@@ -74,7 +80,7 @@ class StreamState:
 
     @property
     def link_capacity(self) -> int:
-        return self.src.shape[0]
+        return self.links.nnz_capacity
 
     @property
     def n_windows(self) -> int:
@@ -84,12 +90,49 @@ class StreamState:
     def ip_bins(self) -> int:
         return self.activity.shape[1]
 
+    # -- flat entry-granularity views (the pre-CSR state layout) ------------
+    @property
+    def n_links(self) -> jnp.ndarray:
+        return self.links.nnz
+
+    @property
+    def win(self) -> jnp.ndarray:
+        """(link_capacity,) int32 window per link, tail = int32 max."""
+        return self.links.entry_row_key(0)
+
+    @property
+    def src(self) -> jnp.ndarray:
+        return self.links.entry_row_key(1)
+
+    @property
+    def dst(self) -> jnp.ndarray:
+        return self.links.col_keys
+
+    @property
+    def packets(self) -> jnp.ndarray:
+        return self.links.vals
+
 
 jax.tree_util.register_dataclass(
     StreamState,
     data_fields=[f.name for f in dataclasses.fields(StreamState)],
     meta_fields=[],
 )
+
+
+def empty_links_csr(link_capacity: int) -> CsrMatrix:
+    """The empty accumulated matrix: every row pointer is 0 (== nnz)."""
+    return CsrMatrix(
+        row_keys=(
+            jnp.full((link_capacity,), _I32_MAX, jnp.int32),  # window
+            jnp.full((link_capacity,), _I32_MAX, jnp.int32),  # src
+        ),
+        indptr=jnp.zeros((link_capacity + 1,), jnp.int32),
+        col_keys=jnp.full((link_capacity,), _I32_MAX, jnp.int32),
+        vals=jnp.zeros((link_capacity,), jnp.int32),
+        n_rows=jnp.zeros((), jnp.int32),
+        nnz=jnp.zeros((), jnp.int32),
+    )
 
 
 def init_state(
@@ -101,11 +144,7 @@ def init_state(
         ip_values=jnp.full((ip_capacity,), _I32_MAX, jnp.int32),
         ip_ids=jnp.zeros((ip_capacity,), jnp.int32),
         n_ips=zero,
-        win=jnp.full((link_capacity,), _I32_MAX, jnp.int32),
-        src=jnp.full((link_capacity,), _I32_MAX, jnp.int32),
-        dst=jnp.full((link_capacity,), _I32_MAX, jnp.int32),
-        packets=jnp.zeros((link_capacity,), jnp.int32),
-        n_links=zero,
+        links=empty_links_csr(link_capacity),
         activity=jnp.zeros((n_windows, ip_bins), jnp.float32),
         n_packets=zero,
         n_batches=zero,

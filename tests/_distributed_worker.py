@@ -8,13 +8,18 @@ from repro.compat import shard_map
 
 from repro.core.ref import ref_run_all_queries
 from repro.core.table import Table
-from repro.dist import distributed_queries, distributed_unique_count
+from repro.dist import (
+    distributed_queries,
+    distributed_queries_naive,
+    distributed_unique_count,
+)
 from repro.dist.compress import psum_bf16, psum_int8
 
 assert len(jax.devices()) == 8, jax.devices()
 
 
 def check_queries_match_oracle():
+    """CSR-shard path == pre-CSR flat-exchange path == NumPy oracle."""
     mesh = jax.make_mesh((8,), ("rows",))
     rng = np.random.default_rng(0)
     n = 8 * 2048
@@ -26,13 +31,21 @@ def check_queries_match_oracle():
         t = Table.from_dict({"src": src, "dst": dst, "n_packets": w})
         return distributed_queries(t, "rows")
 
+    def fn_naive(src, dst, w):
+        t = Table.from_dict({"src": src, "dst": dst, "n_packets": w})
+        return distributed_queries_naive(t, "rows")
+
     f = jax.jit(
         shard_map(fn, mesh=mesh, in_specs=(P("rows"),) * 3, out_specs=P())
     )
-    res = f(src, dst, w)
+    g = jax.jit(
+        shard_map(fn_naive, mesh=mesh, in_specs=(P("rows"),) * 3, out_specs=P())
+    )
+    res, res_naive = f(src, dst, w), g(src, dst, w)
     assert int(res["overflow"]) == 0
     for k, v in ref_run_all_queries(src, dst, w).items():
         assert int(res[k]) == v, (k, int(res[k]), v)
+        assert int(res_naive[k]) == v, ("naive", k, int(res_naive[k]), v)
 
 
 def check_skewed_keys_still_exact():

@@ -242,6 +242,48 @@ def test_merge_states_equals_full_stream():
     assert sorted(ids.tolist()) == list(range(len(ids)))
 
 
+def test_merge_states_associative_commutative_up_to_ids():
+    """3-state random-merge property: every merge order/grouping yields the
+    same link content, scalar suite and activity — only the (necessarily
+    arbitrary) stable-id assignment may differ (the state.py contract)."""
+    rng = np.random.default_rng(42)
+    for trial in range(3):
+        src, dst, win, _ = _capture(n=900, seed=trial)
+        cuts = sorted(rng.choice(np.arange(100, 800), 2, replace=False))
+        parts = [(src[a:b], dst[a:b], win[a:b])
+                 for a, b in zip([0, *cuts], [*cuts, 900])]
+
+        def build(i):
+            s, d, w = parts[i]
+            return _stream(s, d, w, batch=300, link_capacity=900).state
+
+        def merged(order, grouping):
+            s = [build(i) for i in order]
+            if grouping == "left":       # (a ⊕ b) ⊕ c
+                return merge_states(merge_states(s[0], s[1]), s[2])
+            return merge_states(s[0], merge_states(s[1], s[2]))  # a ⊕ (b ⊕ c)
+
+        ref = merged((0, 1, 2), "left")
+        orders = [((0, 1, 2), "right"), ((2, 0, 1), "left"),
+                  ((1, 2, 0), "right")]
+        for order, grouping in orders:
+            got = merged(order, grouping)
+            # link content and activity: exactly the union, any order
+            for f in ("win", "src", "dst", "packets"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(got, f)), np.asarray(getattr(ref, f)),
+                    (f, order, grouping))
+            np.testing.assert_array_equal(np.asarray(got.activity),
+                                          np.asarray(ref.activity))
+            for f in ("n_links", "n_ips", "n_packets", "overflow"):
+                assert int(getattr(got, f)) == int(getattr(ref, f)), f
+            # dictionary: same IP set, ids a bijection (relabeling allowed)
+            np.testing.assert_array_equal(np.asarray(got.ip_values),
+                                          np.asarray(ref.ip_values))
+            ids = np.asarray(got.ip_ids)[: int(got.n_ips)]
+            assert sorted(ids.tolist()) == list(range(int(got.n_ips)))
+
+
 def test_merge_states_rejects_mismatched_shapes():
     from repro.stream import init_state
 

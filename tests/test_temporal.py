@@ -78,6 +78,56 @@ def test_window_ids_basics():
     np.testing.assert_array_equal(np.asarray(window_ids(ts, 50)), [0, 0, 1, 3])
 
 
+def test_window_ids_explicit_t0():
+    """t0= pins the window origin instead of the column minimum — the
+    streaming engine's contract (its link tables may not contain window 0
+    mid-stream, and a min-derived origin would silently shift windows)."""
+    ts = jnp.asarray(np.array([100, 149, 150, 299], np.int32))
+    np.testing.assert_array_equal(np.asarray(window_ids(ts, 50, t0=0)),
+                                  [2, 2, 3, 5])
+    # ts already holding window ids: t0=0, window_len=1 is the identity
+    wid = jnp.asarray(np.array([3, 0, 2, 2], np.int32))
+    np.testing.assert_array_equal(np.asarray(window_ids(wid, 1, t0=0)),
+                                  [3, 0, 2, 2])
+    # negative origin offsets work (timestamps before t0 -> negative ids,
+    # callers clip); windowed_queries clips them into window 0
+    np.testing.assert_array_equal(np.asarray(window_ids(ts, 50, t0=200)),
+                                  [-2, -2, -1, 1])
+
+
+@pytest.mark.parametrize("method", ["csr", "grid"])
+def test_windowed_queries_empty_table(method):
+    """n_valid == 0: every statistic is 0 in every window, both paths."""
+    t = Table.from_dict(
+        {"src": np.zeros(16, np.int32), "dst": np.zeros(16, np.int32),
+         "ts": np.zeros(16, np.int32)}, n_valid=0)
+    res = jax.jit(
+        lambda t: windowed_queries(t, 10, 4, method=method)
+    )(t)
+    for k, v in res.items():
+        assert v.shape == (4,)
+        np.testing.assert_array_equal(np.asarray(v), 0, err_msg=k)
+
+
+def test_windowed_queries_t0_pins_origin():
+    """Same rows shifted in time: with t0= the suite is invariant, without
+    it the min-derived origin would re-bucket rows identically anyway —
+    but a *missing* early window must not shift later ones."""
+    rng = np.random.default_rng(9)
+    n = 400
+    src = rng.integers(0, 20, n).astype(np.int32)
+    dst = rng.integers(0, 20, n).astype(np.int32)
+    win = rng.integers(1, 3, n).astype(np.int32)   # window 0 never occurs
+    t = Table.from_dict({"src": src, "dst": dst, "ts": win})
+    res = windowed_queries(t, 1, 4, t0=0)
+    assert int(res["valid_packets"][0]) == 0       # window 0 stays empty
+    assert int(res["valid_packets"].sum()) == n
+    # without t0 the min (=1) becomes the origin and everything shifts
+    shifted = windowed_queries(t, 1, 4)
+    np.testing.assert_array_equal(np.asarray(shifted["valid_packets"])[:2],
+                                  np.asarray(res["valid_packets"])[1:3])
+
+
 def test_windows_concatenate_to_global():
     """Σ_w valid_packets[w] == global count (conservation property)."""
     rng = np.random.default_rng(2)
