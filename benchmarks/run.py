@@ -4,6 +4,7 @@ Emits ``name,us_per_call,derived`` CSV rows:
   io/*           paper Table II   (format read times)
   query/*        paper Fig. 1 + Table III (per-query speedups vs numpy)
   graphblas/*    paper Fig. 2     (vs scipy-CSR GraphBLAS-style reference)
+  algorithms/*   Graph Challenge  (BFS/CC/PageRank/triangles, oracle-gated)
   anonymize/*    paper §IV        (shuffle vs HashGraph-style vs numpy)
   kernel/*       beyond-paper     (kernel-path dispatch)
   distributed/*  beyond-paper     (shard_map pipeline at 8 shards)
@@ -16,9 +17,12 @@ the plan-vs-naive head-to-head rows (DESIGN.md §2.3).  The graphblas
 section likewise writes ``--graphblas-json`` (default
 ``BENCH_graphblas.json``): the scipy-CSR reference plus the in-repo
 dense-grid vs CSR A/B with the compiled peak-HBM estimate (DESIGN.md §2.4).
+The algorithms section writes ``--algorithms-json`` (default
+``BENCH_algorithms.json``): per-algorithm walls with oracle-parity flags
+plus the analyze(algorithms=True) HLO sort count (DESIGN.md §2.5).
 
 ``python -m benchmarks.run [--quick] [--n N] [--only PREFIX] [--ab]
-[--bench-json PATH] [--graphblas-json PATH]``
+[--bench-json PATH] [--graphblas-json PATH] [--algorithms-json PATH]``
 """
 from __future__ import annotations
 
@@ -39,11 +43,15 @@ def main() -> None:
     ap.add_argument("--graphblas-json", default="BENCH_graphblas.json",
                     help="machine-readable graphblas A/B rows "
                          "(empty string disables)")
+    ap.add_argument("--algorithms-json", default="BENCH_algorithms.json",
+                    help="machine-readable graph-algorithm rows "
+                         "(empty string disables)")
     args = ap.parse_args()
     n = (1 << 17) if args.quick else args.n
 
-    from . import (bench_anonymize, bench_distributed, bench_endtoend,
-                   bench_graphblas, bench_io, bench_kernels, bench_queries)
+    from . import (bench_algorithms, bench_anonymize, bench_distributed,
+                   bench_endtoend, bench_graphblas, bench_io, bench_kernels,
+                   bench_queries)
 
     sections = [
         ("io", lambda: bench_io.run(n=n)),
@@ -51,6 +59,8 @@ def main() -> None:
             n=n, ab=args.ab, json_path=args.bench_json or None)),
         ("graphblas", lambda: bench_graphblas.run(
             n=n, json_path=args.graphblas_json or None)),
+        ("algorithms", lambda: bench_algorithms.run(
+            n=n, json_path=args.algorithms_json or None)),
         ("anonymize", lambda: bench_anonymize.run(n=n)),
         ("kernel", bench_kernels.run),
         ("distributed", bench_distributed.run),

@@ -102,6 +102,8 @@ class ChallengeConfig:
     backend: str = "auto"                # histogram kernel dispatch
     fused: bool = False                  # also time the one-program path
     distributed: bool = False            # scalar suite via shard_map
+    algorithms: bool = False             # BFS/CC/PageRank/triangles pass
+    bfs_source: int = 0                  # BFS source (anonymized vertex id)
     workdir: Optional[str] = None        # capture cache dir (tmp if None)
 
     def __post_init__(self):
@@ -196,7 +198,11 @@ class ChallengeResults:
     values), ``per_source``/``per_destination`` (Q6/Q11) and
     ``source_fanout``/``destination_fanin`` (Q8/Q13).  Beyond Table III:
     per-window statistics, the batched per-window activity histogram, the
-    cross-window IP overlap and the k heaviest links.
+    cross-window IP overlap and the k heaviest links.  ``algorithms`` is
+    the optional iterative-algorithm pass (``analyze(algorithms=True)``):
+    a :class:`repro.core.algorithms.AlgorithmResults` bundle over the
+    anonymized traffic graph, or None when the pass is off (None is a
+    valid empty pytree subtree, so the dataclass jits either way).
     """
 
     scalars: QueryResults
@@ -211,6 +217,7 @@ class ChallengeResults:
     windowed: Dict[str, jnp.ndarray]
     window_activity: jnp.ndarray      # (n_windows, ip_bins) float32
     window_ip_overlap: jnp.ndarray    # (n_windows,) int32
+    algorithms: object = None         # AlgorithmResults | None
 
 
 jax.tree_util.register_dataclass(
@@ -222,12 +229,19 @@ jax.tree_util.register_dataclass(
 
 @dataclasses.dataclass
 class ChallengeRun:
-    """A finished run: device results + timings + the host capture columns."""
+    """A finished run: device results + timings + the host capture columns.
+
+    ``anon_columns`` (populated when ``config.algorithms`` is set) holds
+    host copies of the anonymized src/dst live prefix — the exact edge
+    list the algorithm pass ran on, so the NumPy oracles can replay it
+    directly in the anonymized-id domain (challenge/run.py --verify).
+    """
 
     results: ChallengeResults
     timings: ChallengePhaseTimings
     capture: Dict[str, np.ndarray]
     config: ChallengeConfig
+    anon_columns: Optional[Dict[str, np.ndarray]] = None
 
 
 # ---------------------------------------------------------------------------
@@ -411,6 +425,8 @@ def analyze(
     backend: str = "auto",
     use_plan: bool = True,
     windowed_method: str = "csr",
+    algorithms: bool = False,
+    bfs_source: int = 0,
 ) -> ChallengeResults:
     """Every challenge statistic in one jit-able call.
 
@@ -427,8 +443,20 @@ def analyze(
     formulation — ~10 independent group-by sorts that XLA CSE can only
     partially dedupe — as the A/B baseline; all paths return bit-identical
     results.
+
+    ``algorithms=True`` adds the iterative pass (DESIGN.md §2.5): BFS
+    levels from ``bfs_source``, connected components, PageRank and
+    triangle counts over the anonymized traffic graph.  The pass runs off
+    the zero-sort CSR pair of the two plans (components reuses the
+    dst-keyed CSR as its transpose), so the THREE-sort budget holds with
+    it enabled — asserted alongside the base budget in tests.
     """
     if not use_plan:
+        if algorithms:
+            raise ValueError(
+                "algorithms=True requires the plan path (use_plan=True): "
+                "the pass is defined off the plan's zero-sort CSR pair"
+            )
         return _analyze_naive(
             t, n_windows=n_windows, ip_bins=ip_bins, k=k, backend=backend
         )
@@ -441,7 +469,21 @@ def analyze(
     fanout = lead_fanout(plan_src)
     fanin = lead_fanout(plan_dst)
 
+    algo = None
+    if algorithms:
+        from ..core.algorithms import graph_algorithms
+        from ..core.queries import table_csrs
+
+        csr_src, csr_dst = table_csrs(t, plans)
+        # static vertex domain: anonymized ids are < n_unique_ips, which is
+        # bounded by both endpoints of every packet row -> 2 * capacity
+        algo = graph_algorithms(
+            csr_src, csr_dst, 2 * t.capacity,
+            n_live=ips.n_unique, source=bfs_source, backend=backend,
+        )
+
     return ChallengeResults(
+        algorithms=algo,
         scalars=scalar_queries_from_plans(
             t, plan_src, plan_dst, ips, links=links, per_src=per_src,
             per_dst=per_dst, fanout=fanout, fanin=fanin,
@@ -545,7 +587,8 @@ def run_challenge(
     workdir = cfg.workdir or tempfile.mkdtemp(prefix="netsense_challenge_")
     os.makedirs(workdir, exist_ok=True)
     kw = dict(n_windows=cfg.n_windows, ip_bins=cfg.ip_bins, k=cfg.top_k,
-              backend=cfg.backend)
+              backend=cfg.backend, algorithms=cfg.algorithms,
+              bfs_source=cfg.bfs_source)
 
     def _build(s, d, wn, nv):
         table = build_table(s, d, wn, nv)  # build once; A_t groups the same
@@ -604,8 +647,16 @@ def run_challenge(
     if cfg.fused:
         timings.fused_s = _time_fused(cfg, src, dst, win, n, key, kw)
 
+    anon_columns = None
+    if cfg.algorithms:
+        at = anon.table
+        anon_columns = {
+            "src": np.asarray(at["src"])[:n].astype(np.int64),
+            "dst": np.asarray(at["dst"])[:n].astype(np.int64),
+        }
+
     return ChallengeRun(results=results, timings=timings, capture=capture,
-                        config=cfg)
+                        config=cfg, anon_columns=anon_columns)
 
 
 def _time_fused(cfg, src, dst, win, n, key, kw) -> float:

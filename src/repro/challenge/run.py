@@ -87,6 +87,78 @@ def format_extras(r, nw: int) -> str:
     return "\n".join(out)
 
 
+def format_algorithms(r) -> str:
+    """Summary of the iterative-algorithm pass (``analyze --algorithms``)."""
+    a = r.algorithms
+    n = int(r.scalars.n_unique_ips)
+    levels = np.asarray(a.bfs.levels)[:n]
+    reached = levels[levels >= 0]
+    out = ["", f"graph algorithms over the anonymized traffic graph "
+              f"({n:,} vertices):"]
+    out.append(
+        f"  bfs        reached {int(a.bfs.n_reached):,} vertices, "
+        f"max level {int(reached.max()) if reached.size else -1}, "
+        f"{int(a.bfs.iterations)} iters, converged={bool(a.bfs.converged)}"
+    )
+    out.append(
+        f"  components {int(a.components.n_components):,} weakly connected, "
+        f"{int(a.components.iterations)} iters, "
+        f"converged={bool(a.components.converged)}"
+    )
+    ranks = np.asarray(a.pagerank.ranks)[:n]
+    top = np.argsort(ranks)[::-1][:3]
+    head = " ".join(f"{v}:{ranks[v]:.5f}" for v in top)
+    out.append(
+        f"  pagerank   residual {float(a.pagerank.residual):.2e} after "
+        f"{int(a.pagerank.iterations)} iters, "
+        f"converged={bool(a.pagerank.converged)}, top {head}"
+    )
+    out.append(
+        f"  triangles  {int(a.triangles.total):,} closed directed wedges "
+        f"(A ⊙ A·A mass)"
+    )
+    return "\n".join(out)
+
+
+def verify_algorithms(run: ChallengeRun) -> int:
+    """Replay all four algorithms with the NumPy oracles on the anonymized
+    edge list; return the number of disagreeing result families."""
+    from ..kernels.ref import ref_bfs, ref_cc, ref_pagerank, ref_triangles
+
+    a = run.results.algorithms
+    src, dst = run.anon_columns["src"], run.anon_columns["dst"]
+    n = int(run.results.scalars.n_unique_ips)
+    bad = 0
+
+    levels = np.asarray(a.bfs.levels)
+    want = ref_bfs(src, dst, n, run.config.bfs_source)
+    if not (np.array_equal(levels[:n], want) and np.all(levels[n:] == -1)):
+        print("MISMATCH bfs levels vs oracle", file=sys.stderr)
+        bad += 1
+
+    labels = np.asarray(a.components.labels)
+    want = ref_cc(src, dst, n)
+    if not (np.array_equal(labels[:n], want) and np.all(labels[n:] == -1)
+            and int(a.components.n_components) == len(np.unique(want))):
+        print("MISMATCH component labels vs oracle", file=sys.stderr)
+        bad += 1
+
+    ranks = np.asarray(a.pagerank.ranks)
+    want, _, _ = ref_pagerank(src, dst, np.ones(len(src)), n)
+    l1 = np.abs(ranks[:n] - want).sum()
+    if not (l1 < 1e-6 and np.all(ranks[n:] == 0.0)):
+        print(f"MISMATCH pagerank vs oracle: L1={l1:.3e}", file=sys.stderr)
+        bad += 1
+
+    per_node = np.asarray(a.triangles.per_node)
+    want, total = ref_triangles(src, dst, n)
+    if not (np.array_equal(per_node[:n], want.astype(np.float32))
+            and int(a.triangles.total) == total):
+        print("MISMATCH triangle counts vs oracle", file=sys.stderr)
+        bad += 1
+    return bad
+
+
 def verify_scalars(run: ChallengeRun) -> int:
     """Compare every scalar to the NumPy oracle; return mismatch count."""
     cap = run.capture
@@ -123,6 +195,11 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="also time build+anonymize+analyze as one program")
     ap.add_argument("--distributed", action="store_true",
                     help="scalar suite via shard_map over local devices")
+    ap.add_argument("--algorithms", action="store_true",
+                    help="run BFS/CC/PageRank/triangles over the anonymized "
+                         "traffic graph (oracle-checked under --verify)")
+    ap.add_argument("--bfs-source", type=int, default=0,
+                    help="BFS source vertex (anonymized id, default 0)")
     ap.add_argument("--workdir", default=None,
                     help="capture cache dir (tmp if unset)")
     ap.add_argument("--no-verify", dest="verify", action="store_false",
@@ -135,7 +212,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             ip_bins=args.ip_bins, top_k=args.top_k, method=args.method,
             rounds=args.rounds, seed=args.seed, fmt=args.format,
             backend=args.backend, fused=args.fused,
-            distributed=args.distributed, workdir=args.workdir,
+            distributed=args.distributed, algorithms=args.algorithms,
+            bfs_source=args.bfs_source, workdir=args.workdir,
         )
     except ValueError as e:
         ap.error(str(e))
@@ -147,13 +225,19 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     print()
     print(format_queries(run.results))
     print(format_extras(run.results, run.config.n_windows))
+    if args.algorithms:
+        print(format_algorithms(run.results))
 
     if args.verify:
         bad = verify_scalars(run)
+        if args.algorithms:
+            bad += verify_algorithms(run)
         if bad:
-            print(f"\n{bad} scalar(s) disagree with the oracle", file=sys.stderr)
+            print(f"\n{bad} result(s) disagree with the oracle", file=sys.stderr)
             return 1
         print("\nall scalar queries match the NumPy oracle ✓")
+        if args.algorithms:
+            print("all four graph algorithms match their NumPy oracles ✓")
     return 0
 
 

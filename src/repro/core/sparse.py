@@ -57,6 +57,10 @@ __all__ = [
     "degrees",
     "mxv",
     "vxm",
+    "transpose",
+    "symmetrize",
+    "gather_rows",
+    "scatter_rows",
 ]
 
 
@@ -394,8 +398,24 @@ def degrees(csr: CsrMatrix) -> jnp.ndarray:
 # semiring mxv / vxm (Pallas segmented-reduction path)
 # ---------------------------------------------------------------------------
 
-_ADD_OPS = {"plus": "sum", "max": "max"}
+_ADD_OPS = {"plus": "sum", "max": "max", "min": "max"}
 _MUL_OPS = ("times", "first", "second")
+_ADD_IDENTS = {"plus": 0.0, "max": -jnp.inf, "min": jnp.inf}
+
+
+def _semiring_reduce(
+    prod: jnp.ndarray, seg: jnp.ndarray, num_segments: int, add: str,
+    backend: str,
+) -> jnp.ndarray:
+    """Dispatch the ⊕ reduction.  The min monoid rides the max kernel by
+    negation (min(x) = -max(-x), identity ``+inf``) — no third kernel."""
+    if add == "min":
+        return -segmented_reduce(
+            -prod, seg, num_segments, op="max", backend=backend
+        )
+    return segmented_reduce(
+        prod, seg, num_segments, op=_ADD_OPS[add], backend=backend
+    )
 
 
 def _products(
@@ -424,9 +444,10 @@ def mxv(
     :func:`reduce_cols`; entries with out-of-range columns drop out).
     ``mask`` (``(row_capacity,)`` bool) keeps only the selected output rows
     — GraphBLAS ``GrB_mxv`` with a structural mask; unmasked/empty rows
-    report the ⊕ identity (0 for plus, ``-inf`` for max).  The reduction
-    dispatches through the Pallas segmented-reduction kernel
-    (``kernels/ops.segmented_reduce``).
+    report the ⊕ identity (0 for plus, ``-inf`` for max, ``+inf`` for min).
+    The reduction dispatches through the Pallas segmented-reduction kernel
+    (``kernels/ops.segmented_reduce``; min rides the max kernel by
+    negation).
     """
     if add not in _ADD_OPS or mul not in _MUL_OPS:
         raise ValueError(f"unsupported semiring ({add!r}, {mul!r})")
@@ -436,12 +457,9 @@ def mxv(
     safe = jnp.clip(csr.col_keys.astype(jnp.int32), 0, n_x - 1)
     prod = _products(csr.vals, x[safe].astype(jnp.float32), mul)
     seg = jnp.where(ok, csr.entry_rows(), -1)
-    y = segmented_reduce(
-        prod, seg, csr.row_capacity, op=_ADD_OPS[add], backend=backend
-    )
+    y = _semiring_reduce(prod, seg, csr.row_capacity, add, backend)
     if mask is not None:
-        ident = jnp.float32(0.0 if add == "plus" else -jnp.inf)
-        y = jnp.where(mask, y, ident)
+        y = jnp.where(mask, y, jnp.float32(_ADD_IDENTS[add]))
     return y
 
 
@@ -473,8 +491,105 @@ def vxm(
     safe = jnp.clip(rows, 0, x.shape[0] - 1)
     prod = _products(csr.vals, x[safe].astype(jnp.float32), mul)
     seg = jnp.where(ok, csr.col_keys.astype(jnp.int32), -1)
-    y = segmented_reduce(prod, seg, num_cols, op=_ADD_OPS[add], backend=backend)
+    y = _semiring_reduce(prod, seg, num_cols, add, backend)
     if mask is not None:
-        ident = jnp.float32(0.0 if add == "plus" else -jnp.inf)
-        y = jnp.where(mask, y, ident)
+        y = jnp.where(mask, y, jnp.float32(_ADD_IDENTS[add]))
     return y
+
+
+# ---------------------------------------------------------------------------
+# structural helpers (transpose / symmetrize / vertex <-> row-slot bridges)
+# ---------------------------------------------------------------------------
+
+def transpose(
+    csr: CsrMatrix,
+    *,
+    nnz_capacity: Optional[int] = None,
+    row_capacity: Optional[int] = None,
+) -> Tuple[CsrMatrix, jnp.ndarray]:
+    """A^T for a single-key-column CSR: ONE :func:`from_coo` sort.
+
+    Swaps the roles of row key and column key (rows of the result are the
+    distinct column keys of ``csr``).  Entries are already distinct, so
+    with the default capacities (``nnz_capacity`` entries can never need
+    more than ``nnz_capacity`` rows) nothing can drop; ``dropped`` is
+    returned anyway to honour the counted-overflow contract when a caller
+    shrinks the capacities.  Returns ``(csr_t, dropped)``.
+    """
+    if len(csr.row_keys) != 1:
+        raise ValueError(
+            f"transpose needs a 1-column row key, got {len(csr.row_keys)}"
+        )
+    if nnz_capacity is None:
+        nnz_capacity = csr.nnz_capacity
+    return from_coo(
+        [csr.col_keys],
+        csr.entry_row_key(0),
+        csr.vals,
+        valid_mask=csr.entry_mask(),
+        op="plus",
+        nnz_capacity=nnz_capacity,
+        row_capacity=row_capacity,
+    )
+
+
+def symmetrize(
+    csr: CsrMatrix,
+    csr_t: Optional[CsrMatrix] = None,
+    *,
+    op: str = "plus",
+    nnz_capacity: Optional[int] = None,
+    row_capacity: Optional[int] = None,
+) -> Tuple[CsrMatrix, jnp.ndarray]:
+    """A ⊕ A^T via :func:`ewise_union` — two sorts, or one when the caller
+    already holds the transpose (e.g. the challenge's src/dst plan pair).
+
+    Coincident (u, v)/(v, u) entries combine under ``op``; the default
+    ``nnz_capacity`` doubles the input's so a fully asymmetric matrix still
+    fits.  Returns ``(csr_sym, dropped)``.
+    """
+    if csr_t is None:
+        csr_t, _ = transpose(csr)
+    if nnz_capacity is None:
+        nnz_capacity = csr.nnz_capacity + csr_t.nnz_capacity
+    if row_capacity is None:
+        row_capacity = nnz_capacity
+    return ewise_union(
+        csr, csr_t, op=op,
+        nnz_capacity=nnz_capacity, row_capacity=row_capacity,
+    )
+
+
+def gather_rows(
+    csr: CsrMatrix, x: jnp.ndarray, *, fill=0.0
+) -> jnp.ndarray:
+    """Row-slot view of a vertex-domain vector: ``out[r] = x[row_key[r]]``.
+
+    The bridge from the vertex-indexed outputs of :func:`vxm` back to the
+    row-slot inputs :func:`vxm` consumes — iterative algorithms alternate
+    the two domains every step.  Rows whose key falls outside ``[0,
+    len(x))`` — padding rows included (key = dtype max) — report ``fill``
+    (pass the ⊕ identity of the surrounding semiring).
+    """
+    x = jnp.asarray(x)
+    key = csr.row_keys[0].astype(jnp.int32)
+    ok = csr.row_mask() & (key >= 0) & (key < x.shape[0])
+    safe = jnp.clip(key, 0, x.shape[0] - 1)
+    return jnp.where(ok, x[safe], jnp.asarray(fill, x.dtype))
+
+
+def scatter_rows(
+    csr: CsrMatrix, slot_vals: jnp.ndarray, num_vertices: int, *, fill=0.0
+) -> jnp.ndarray:
+    """Vertex-domain view of a row-slot vector: ``out[row_key[r]] =
+    slot_vals[r]`` — the inverse bridge of :func:`gather_rows`.
+
+    Row keys are distinct by construction, so the scatter has no
+    collisions; vertices with no row (and keys outside ``[0,
+    num_vertices)``) report ``fill``.
+    """
+    slot_vals = jnp.asarray(slot_vals)
+    key = csr.row_keys[0].astype(jnp.int32)
+    ok = csr.row_mask() & (key >= 0) & (key < num_vertices)
+    out = jnp.full((num_vertices + 1,), fill, slot_vals.dtype)
+    return out.at[jnp.where(ok, key, num_vertices)].set(slot_vals)[:num_vertices]

@@ -21,6 +21,7 @@ from .engine import (
     update_state,
     update_state_naive,
 )
+from .algorithms import snapshot_algorithms
 from .state import StreamState, init_state
 
 __all__ = [
@@ -32,6 +33,7 @@ __all__ = [
     "anonymization_mapping",
     "init_state",
     "link_table",
+    "snapshot_algorithms",
     "merge_states",
     "steady_state",
     "stream_plq",

@@ -1,0 +1,53 @@
+"""Streaming graph algorithms — the iteration tier answered from
+accumulated :class:`~repro.stream.state.StreamState` between batches.
+
+The same sufficient-statistic argument that powers the 14-query snapshot
+(engine.py) covers the algorithm suite: BFS, connected components,
+PageRank and triangle counting are functions of the accumulated traffic
+matrix alone, so a snapshot taken after k micro-batches must equal a
+one-shot batch run over the concatenated stream.  :func:`snapshot_algorithms`
+realises that: it lifts the state's link table (stable-id rows weighted by
+``n_packets``) through the standard plan pair into the (A, A^T) CSR pair
+and hands it to :func:`repro.core.algorithms.graph_algorithms`.
+
+Costs two sorts (the link-table plan pair — built from ``link_capacity``
+rows, not the packet stream) per snapshot; the iteration itself adds zero.
+The vertex domain is the dictionary's stable-id range: ``n_vertices =
+ip_capacity`` statically, ``n_live = state.n_ips`` at runtime — ids are
+first-seen-dense, so the live prefix is exactly the vertex set.
+Equivalence with the batch pass is bit-exact (PageRank included: both
+sides iterate the identical float32 program over the identical CSR), see
+tests/test_algorithms.py.
+"""
+from __future__ import annotations
+
+from ..core.algorithms import AlgorithmResults, graph_algorithms
+from ..core.queries import table_csrs
+from .engine import link_table
+from .state import StreamState
+
+__all__ = ["snapshot_algorithms"]
+
+
+def snapshot_algorithms(
+    state: StreamState,
+    source=0,
+    *,
+    damping: float = 0.85,
+    tol: float = 1e-6,
+    pagerank_iters: int = 100,
+    backend: str = "auto",
+) -> AlgorithmResults:
+    """All four graph algorithms over everything streamed so far (jittable).
+
+    ``source`` is a BFS source in the stable-id domain (traceable scalar).
+    The usual overflow contract applies upstream: results are exact iff
+    ``state.overflow == 0``.
+    """
+    csr_src, csr_dst = table_csrs(link_table(state))
+    return graph_algorithms(
+        csr_src, csr_dst, state.ip_capacity,
+        n_live=state.n_ips, source=source,
+        damping=damping, tol=tol, pagerank_iters=pagerank_iters,
+        backend=backend,
+    )

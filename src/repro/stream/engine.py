@@ -498,6 +498,7 @@ class StreamEngine:
                 _snapshot_results, top_k=cfg.top_k, backend=cfg.backend
             )
         )
+        self._algo = None  # jitted lazily: most streams never ask for it
         self.n_ingested = 0
 
     # -- state access --------------------------------------------------------
@@ -554,6 +555,24 @@ class StreamEngine:
             n_ips=int(state.n_ips),
             overflow=int(state.overflow),
         )
+
+    def algorithms(self, source: int = 0):
+        """BFS/CC/PageRank/triangles over everything streamed so far.
+
+        Answers from the accumulated link-table CSR (two sorts over
+        ``link_capacity`` rows, never the packet stream); equals the batch
+        ``analyze(algorithms=True)`` pass on the concatenated stream up to
+        id relabeling.  Returns an AlgorithmResults pytree (host-synced).
+        """
+        from .algorithms import snapshot_algorithms
+
+        if self._algo is None:
+            self._algo = jax.jit(
+                functools.partial(snapshot_algorithms, backend=self.cfg.backend)
+            )
+        out = self._algo(self._state, jnp.asarray(source, jnp.int32))
+        jax.block_until_ready(out)
+        return out
 
 
 # ---------------------------------------------------------------------------
