@@ -1,0 +1,181 @@
+"""Sketch-tier lane (DESIGN.md §2.6): bounded-memory analytics vs exact CSR.
+
+For every adversarial scenario in :mod:`repro.data.scenarios` the capture
+is folded batch-by-batch through both analytics tiers — the exact CSR
+state (:func:`repro.stream.engine.update_state` at full capacity, zero
+overflow) and the fixed-memory sketch tier
+(:func:`repro.core.sketch.update_sketch`) — and the walls are reported
+side by side.  Then every sketch answer is checked against the NumPy
+oracle truth *with respect to its configured theoretical bound*: HLL
+cardinalities within ``hll_sigma``·1.04/sqrt(m) relative error, the
+maxima inside ``[exact - heavy_offset, exact + εN]``, the packet counter
+bit-exact.  A row here is therefore also a correctness gate (``ok`` per
+metric, hard AssertionError on any violation), mirroring
+``bench_algorithms``; CI parses the JSON and fails on ``ok: false``.
+
+Rows are written machine-readably to ``BENCH_sketches.json`` when a path
+is given, joining the ``BENCH_*.json`` trajectory family of
+``benchmarks/run.py``.
+
+    PYTHONPATH=src python -m benchmarks.bench_sketches [--n N] [--json P]
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.challenge.pipeline import window_column
+from repro.core.ref import ref_run_all_queries
+from repro.core.sketch import (
+    SketchConfig,
+    init_sketch,
+    snapshot_sketch,
+    update_sketch,
+)
+from repro.data.scenarios import SCENARIOS, scenario_packets
+from repro.stream.engine import update_state
+from repro.stream.state import init_state
+
+from .common import emit, time_fn
+
+# the lane measures per-batch update cost + error-vs-bound, not bulk
+# throughput; 2^18 packets keeps four scenarios in seconds (reported)
+MAX_PACKETS = 1 << 18
+N_WINDOWS = 8
+IP_BINS = 1024
+
+
+def _batches(src, dst, win, batch):
+    """Pad the capture into fixed-shape (src, dst, win, n_valid) batches."""
+    out = []
+    for off in range(0, len(src), batch):
+        s, d, w = (a[off:off + batch] for a in (src, dst, win))
+        nv = len(s)
+        pad = batch - nv
+        out.append((
+            jnp.asarray(np.pad(s, (0, pad)), jnp.int32),
+            jnp.asarray(np.pad(d, (0, pad)), jnp.int32),
+            jnp.asarray(np.pad(w, (0, pad)), jnp.int32),
+            nv,
+        ))
+    return out
+
+
+def run(
+    n: int = 1 << 18, iters: int = 3, json_path: Optional[str] = None
+) -> Dict[str, Dict]:
+    n_eff = min(n, MAX_PACKETS)
+    capped = f" (capped from n={n})" if n_eff < n else ""
+    scale = max(n_eff.bit_length() - 1, 4)
+    batch = min(1 << 14, n_eff)
+    cfg = SketchConfig(seed=0)
+
+    j_sketch = jax.jit(functools.partial(update_sketch, backend="auto"))
+    j_exact = jax.jit(functools.partial(update_state, backend="auto"))
+
+    rows: Dict[str, Dict] = {}
+    violations = []
+    for name in sorted(SCENARIOS):
+        cols = scenario_packets(name, n_eff, scale=scale, seed=0)
+        src = cols["src"].astype(np.int32)
+        dst = cols["dst"].astype(np.int32)
+        win = window_column(cols["ts"], N_WINDOWS)
+        parts = _batches(src, dst, win, batch)
+
+        def fold_sketch():
+            st = init_sketch(cfg)
+            for s, d, _, nv in parts:
+                st = j_sketch(st, s, d, nv)
+            return st
+
+        def fold_exact():
+            st = init_state(n_eff, 2 * n_eff, N_WINDOWS, IP_BINS)
+            for s, d, w, nv in parts:
+                st = j_exact(st, s, d, w, nv)
+            return st
+
+        t_sk = time_fn(fold_sketch, iters=iters)
+        t_ex = time_fn(fold_exact, iters=iters)
+        state = fold_sketch()
+        exact_state = fold_exact()
+        assert int(exact_state.overflow) == 0, "exact lane overflowed"
+        snap = snapshot_sketch(state)
+        ref = ref_run_all_queries(src.astype(np.int64), dst.astype(np.int64))
+        b = snap.bounds
+
+        metrics: Dict[str, Dict[str, float]] = {}
+
+        def check(metric, est, want, below, above, rel=False):
+            err = (est - want) / want if rel and want else est - want
+            ok = -below <= err <= above
+            metrics[metric] = {
+                "estimate": float(est), "exact": float(want),
+                "err": float(err), "bound_below": float(below),
+                "bound_above": float(above), "relative": bool(rel),
+                "ok": bool(ok),
+            }
+            if not ok:
+                violations.append((name, metric, err, below, above))
+
+        check("valid_packets", snap.n_packets, ref["valid_packets"], 0, 0)
+        tol = b["hll_rel_tolerance"]
+        check("n_unique_sources", snap.unique_sources,
+              ref["n_unique_sources"], tol, tol, rel=True)
+        check("n_unique_destinations", snap.unique_destinations,
+              ref["n_unique_destinations"], tol, tol, rel=True)
+        check("unique_links", snap.unique_links,
+              ref["unique_links"], tol, tol, rel=True)
+        check("max_link_packets", snap.max_link_packets,
+              ref["max_link_packets"],
+              b["heavy_link_offset"], b["cms_epsilon_n"])
+        check("max_source_packets", snap.max_source_packets,
+              ref["max_source_packets"],
+              b["heavy_src_offset"], b["cms_epsilon_n"])
+        n_ok = sum(m["ok"] for m in metrics.values())
+
+        emit(f"sketch/{name}/exact_fold", t_ex,
+             f"{len(parts)} batches of {batch}, 0 overflow "
+             f"n={n_eff}{capped}")
+        emit(f"sketch/{name}/sketch_fold", t_sk,
+             f"{t_ex / t_sk:.2f}x vs exact, {n_ok}/{len(metrics)} metrics "
+             f"within bounds")
+        rows[name] = {
+            "wall_exact_us": t_ex * 1e6,
+            "wall_sketch_us": t_sk * 1e6,
+            "speedup_vs_exact": t_ex / t_sk,
+            "n_packets": n_eff,
+            "metrics": metrics,
+            "bounds": {k: float(v) for k, v in b.items()},
+        }
+
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump({"n": n_eff, "scale": scale, "batch": batch,
+                       "config": {
+                           "cms_depth": cfg.cms_depth,
+                           "cms_width": cfg.cms_width,
+                           "hll_p": cfg.hll_p,
+                           "heavy_capacity": cfg.heavy_capacity,
+                       },
+                       "scenarios": rows}, fh, indent=2)
+        print(f"sketch/json,0,wrote {json_path}", flush=True)
+
+    if violations:
+        raise AssertionError(
+            f"sketch estimates outside configured bounds: {violations}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=1 << 18)
+    ap.add_argument("--json", default="BENCH_sketches.json")
+    args = ap.parse_args()
+    run(n=args.n, json_path=args.json or None)

@@ -9,6 +9,7 @@ Emits ``name,us_per_call,derived`` CSV rows:
   kernel/*       beyond-paper     (kernel-path dispatch)
   distributed/*  beyond-paper     (shard_map pipeline at 8 shards)
   endtoend/*     paper pipeline   (per-phase + fused full-workload throughput)
+  sketch/*       beyond-paper     (bounded-memory tier: wall + error-vs-bound)
 
 The query section always writes its rows machine-readably (steady-state
 us/call + compiled-HLO sort counts per op) to ``--bench-json``
@@ -22,7 +23,8 @@ The algorithms section writes ``--algorithms-json`` (default
 plus the analyze(algorithms=True) HLO sort count (DESIGN.md §2.5).
 
 ``python -m benchmarks.run [--quick] [--n N] [--only PREFIX] [--ab]
-[--bench-json PATH] [--graphblas-json PATH] [--algorithms-json PATH]``
+[--bench-json PATH] [--graphblas-json PATH] [--algorithms-json PATH]
+[--sketches-json PATH]``
 """
 from __future__ import annotations
 
@@ -46,12 +48,15 @@ def main() -> None:
     ap.add_argument("--algorithms-json", default="BENCH_algorithms.json",
                     help="machine-readable graph-algorithm rows "
                          "(empty string disables)")
+    ap.add_argument("--sketches-json", default="BENCH_sketches.json",
+                    help="machine-readable sketch error-vs-bound rows "
+                         "(empty string disables)")
     args = ap.parse_args()
     n = (1 << 17) if args.quick else args.n
 
     from . import (bench_algorithms, bench_anonymize, bench_distributed,
                    bench_endtoend, bench_graphblas, bench_io, bench_kernels,
-                   bench_queries)
+                   bench_queries, bench_sketches)
 
     sections = [
         ("io", lambda: bench_io.run(n=n)),
@@ -65,6 +70,8 @@ def main() -> None:
         ("kernel", bench_kernels.run),
         ("distributed", bench_distributed.run),
         ("endtoend", lambda: bench_endtoend.run(n=n)),
+        ("sketch", lambda: bench_sketches.run(
+            n=n, json_path=args.sketches_json or None)),
     ]
     print("name,us_per_call,derived")
     failed = 0

@@ -11,12 +11,14 @@ statistics, cross-window IP overlap and the k heaviest links; ``--verify``
 from __future__ import annotations
 
 import argparse
+import functools
 import sys
-from typing import Optional, Sequence
+from typing import Mapping, Optional, Sequence
 
 import numpy as np
 
 from ..core.ref import ref_run_all_queries
+from ..core.sketch import SketchConfig, SketchSnapshot
 from .pipeline import ChallengeConfig, ChallengeRun, run_challenge
 
 
@@ -159,6 +161,122 @@ def verify_algorithms(run: ChallengeRun) -> int:
     return bad
 
 
+# --- the approximate (sketch) tier --------------------------------------------
+
+def run_sketch_tier(
+    capture: Mapping[str, np.ndarray],
+    cfg: SketchConfig,
+    *,
+    batch_capacity: int = 1 << 15,
+    backend: str = "auto",
+    top_k: int = 10,
+) -> SketchSnapshot:
+    """Fold the whole capture through the bounded-memory sketch tier
+    (:mod:`repro.core.sketch`) in fixed-capacity micro-batches — the batch
+    pipeline's counterpart of ``StreamConfig(tier="sketch")``."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..core.sketch import init_sketch, snapshot_sketch, update_sketch
+
+    src = np.asarray(capture["src"], np.int64)
+    dst = np.asarray(capture["dst"], np.int64)
+    state = init_sketch(cfg)
+    update = jax.jit(functools.partial(update_sketch, backend=backend))
+    for off in range(0, len(src), batch_capacity):
+        s = src[off:off + batch_capacity]
+        d = dst[off:off + batch_capacity]
+        n = len(s)
+        pad = batch_capacity - n
+        state = update(
+            state,
+            jnp.asarray(np.pad(s, (0, pad)), jnp.int32),
+            jnp.asarray(np.pad(d, (0, pad)), jnp.int32),
+            n,
+        )
+    jax.block_until_ready(state)
+    return snapshot_sketch(state, k=top_k)
+
+
+def format_sketch(snap: SketchSnapshot) -> str:
+    """Sketch-tier report: estimates with their configured error bounds."""
+    b = snap.bounds
+    out = [
+        "",
+        f"sketch tier (bounded memory, overflow={snap.overflow} by "
+        "construction):",
+        f"  valid packets            {snap.n_packets:,} (exact counter)",
+        f"  unique sources           ~{snap.unique_sources:,.0f}  "
+        f"(HLL, rel tol {b['hll_rel_tolerance']:.3f})",
+        f"  unique destinations      ~{snap.unique_destinations:,.0f}",
+        f"  unique links             ~{snap.unique_links:,.0f}",
+        f"  max link packets         ~{snap.max_link_packets:,.0f}  "
+        f"(+{b['cms_epsilon_n']:,.1f} / -{b['heavy_link_offset']:,.0f})",
+        f"  max source packets       ~{snap.max_source_packets:,.0f}  "
+        f"(+{b['cms_epsilon_n']:,.1f} / -{b['heavy_src_offset']:,.0f})",
+    ]
+    k = min(snap.n_top_talkers, 5)
+    if k:
+        head = "  ".join(
+            f"{int(snap.top_talker_src[i])}:{int(snap.top_talker_packets[i])}"
+            for i in range(k)
+        )
+        out.append(f"  top talkers (est <= true + offset)   {head}")
+    k = min(snap.n_top_links, 5)
+    if k:
+        head = "  ".join(
+            f"({int(snap.top_link_src[i])},{int(snap.top_link_dst[i])}):"
+            f"{int(snap.top_link_packets[i])}"
+            for i in range(k)
+        )
+        out.append(f"  top links                            {head}")
+    return "\n".join(out)
+
+
+def verify_sketch(snap: SketchSnapshot, exact: Mapping[str, int]) -> int:
+    """Check every sketch estimate against its configured theoretical bound
+    given the exact answers; return the number of violations.
+
+    ``exact`` maps the scalar names (``valid_packets``, ``unique_links``,
+    ``n_unique_sources``, ``n_unique_destinations``, ``max_link_packets``,
+    ``max_source_packets``) to the exact-tier values.  Bounds checked:
+    HLL relative error within tolerance; maxima within
+    ``[-heavy offset, +CMS εN]``; the packet counter bit-exact.
+    """
+    b = snap.bounds
+    bad = 0
+
+    def fail(msg: str) -> None:
+        nonlocal bad
+        print(f"SKETCH BOUND VIOLATION: {msg}", file=sys.stderr)
+        bad += 1
+
+    if snap.n_packets != int(exact["valid_packets"]):
+        fail(f"valid_packets {snap.n_packets} != {exact['valid_packets']}")
+    tol = b["hll_rel_tolerance"]
+    for name, est in [
+        ("n_unique_sources", snap.unique_sources),
+        ("n_unique_destinations", snap.unique_destinations),
+        ("unique_links", snap.unique_links),
+    ]:
+        want = int(exact[name])
+        rel = abs(est - want) / max(want, 1)
+        if rel > tol:
+            fail(f"{name} est {est:.0f} vs exact {want}: rel {rel:.4f} > "
+                 f"tol {tol:.4f}")
+    for name, est, off_key in [
+        ("max_link_packets", snap.max_link_packets, "heavy_link_offset"),
+        ("max_source_packets", snap.max_source_packets, "heavy_src_offset"),
+    ]:
+        want = int(exact[name])
+        lo = want - b[off_key]
+        hi = want + b["cms_epsilon_n"]
+        if not lo <= est <= hi:
+            fail(f"{name} est {est:.0f} outside [{lo:.1f}, {hi:.1f}] "
+                 f"(exact {want})")
+    return bad
+
+
 def verify_scalars(run: ChallengeRun) -> int:
     """Compare every scalar to the NumPy oracle; return mismatch count."""
     cap = run.capture
@@ -202,6 +320,19 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="BFS source vertex (anonymized id, default 0)")
     ap.add_argument("--workdir", default=None,
                     help="capture cache dir (tmp if unset)")
+    ap.add_argument("--tier", default="exact",
+                    choices=["exact", "sketch", "both"],
+                    help="also run the bounded-memory sketch tier beside "
+                         "the exact pipeline (sketch/both; under --verify "
+                         "every estimate is gated against its error bound)")
+    ap.add_argument("--sketch-depth", type=int, default=4,
+                    help="Count-Min depth (rows)")
+    ap.add_argument("--sketch-width", type=int, default=4096,
+                    help="Count-Min width (cells per row)")
+    ap.add_argument("--hll-p", type=int, default=12,
+                    help="HyperLogLog precision: 2^p registers")
+    ap.add_argument("--heavy-capacity", type=int, default=64,
+                    help="space-saving heavy-hitter counters")
     ap.add_argument("--no-verify", dest="verify", action="store_false",
                     help="skip the NumPy-oracle scalar check")
     args = ap.parse_args(argv)
@@ -228,16 +359,46 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     if args.algorithms:
         print(format_algorithms(run.results))
 
+    sketch_snap = None
+    if args.tier != "exact":
+        # the batch pipeline always computes the exact tier (it IS the
+        # challenge); sketch/both adds the approximate tier beside it and,
+        # under --verify, gates every estimate against its bound
+        try:
+            sketch_cfg = SketchConfig(
+                cms_depth=args.sketch_depth, cms_width=args.sketch_width,
+                hll_p=args.hll_p, heavy_capacity=args.heavy_capacity,
+                seed=args.seed,
+            )
+        except ValueError as e:
+            ap.error(str(e))
+        sketch_snap = run_sketch_tier(
+            run.capture, sketch_cfg, backend=args.backend, top_k=args.top_k
+        )
+        print(format_sketch(sketch_snap))
+
     if args.verify:
         bad = verify_scalars(run)
         if args.algorithms:
             bad += verify_algorithms(run)
+        if sketch_snap is not None:
+            s = run.results.scalars
+            bad += verify_sketch(sketch_snap, {
+                "valid_packets": int(s.valid_packets),
+                "unique_links": int(s.unique_links),
+                "n_unique_sources": int(s.n_unique_sources),
+                "n_unique_destinations": int(s.n_unique_destinations),
+                "max_link_packets": int(s.max_link_packets),
+                "max_source_packets": int(s.max_source_packets),
+            })
         if bad:
             print(f"\n{bad} result(s) disagree with the oracle", file=sys.stderr)
             return 1
         print("\nall scalar queries match the NumPy oracle ✓")
         if args.algorithms:
             print("all four graph algorithms match their NumPy oracles ✓")
+        if sketch_snap is not None:
+            print("all sketch estimates within their configured bounds ✓")
     return 0
 
 

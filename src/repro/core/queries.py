@@ -22,7 +22,7 @@ slices over the shared CSR skeleton, reduced one window at a time.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +33,9 @@ from .ops import (
     argmax_top_k,
     clamp_k,
     groupby_aggregate,
+    isin,
     masked_max,
+    semi_join,
     top_k,
     unique,
 )
@@ -78,6 +80,11 @@ __all__ = [
     "QueryResults",
     "run_all_queries",
     "run_all_queries_naive",
+    "top_k_drift",
+    "top_links_drift",
+    "new_talker_rate",
+    "new_talker_rate_exact",
+    "new_talker_rate_sketch",
 ]
 
 
@@ -416,6 +423,94 @@ def run_all_queries(
     """
     plan_src, plan_dst = table_plans(t) if plans is None else plans
     return scalar_queries_from_plans(t, plan_src, plan_dst)
+
+
+# --- detection queries (tier-agnostic) ----------------------------------------
+#
+# Each detector consumes only *summaries* — key lists and cardinalities —
+# so the same function runs on the exact tier (TopLinks / UniqueResult off
+# the CSR path) and the sketch tier (space-saving tables / HyperLogLog
+# registers, core.sketch).  On the sketch tier the answer inherits that
+# tier's error bounds: the space-saving superset guarantee means a truly
+# heavy new link cannot be missed by the drift detector, and the HLL
+# tolerance bounds the new-talker-rate error (METHODOLOGY.md).
+
+
+def top_k_drift(
+    prev_keys: Sequence[jnp.ndarray],
+    prev_n,
+    cur_keys: Sequence[jnp.ndarray],
+    cur_n,
+) -> jnp.ndarray:
+    """Fraction of the current top-k keys absent from the previous top-k.
+
+    Stationary traffic keeps the same heavy hitters window over window
+    (drift ~ 0); a DDoS burst or scan sweep replaces them wholesale
+    (drift → 1).  Keys may be multi-column (links: src + dst).  Returns a
+    float32 scalar in [0, 1]; 0 when the current set is empty.
+    """
+    cur_n = jnp.asarray(cur_n, jnp.int32)
+    member = semi_join(cur_keys, prev_keys, cur_n, prev_n)
+    cap = cur_keys[0].shape[0]
+    live = jnp.arange(cap, dtype=jnp.int32) < cur_n
+    n_new = jnp.sum((live & ~member).astype(jnp.int32))
+    return n_new.astype(jnp.float32) / jnp.maximum(cur_n, 1).astype(jnp.float32)
+
+
+def top_links_drift(prev: TopLinks, cur: TopLinks) -> jnp.ndarray:
+    """:func:`top_k_drift` over two heavy-link reports (either tier: the
+    exact :func:`top_links` result or the sketch tier's space-saving table
+    repacked as :class:`TopLinks` by ``core.sketch``/``stream.engine``)."""
+    return top_k_drift(
+        [prev.src, prev.dst], prev.n_valid, [cur.src, cur.dst], cur.n_valid
+    )
+
+
+def new_talker_rate(prev_card, union_card, cur_card) -> jnp.ndarray:
+    """Share of this window's distinct sources never seen before.
+
+    Pure cardinality arithmetic — ``(|prev ∪ cur| - |prev|) / |cur|`` — so
+    any tier that can report the three cardinalities can answer it.  Botnet
+    beaconing keeps the rate near 0 (the same bots recur); spoofed-source
+    DDoS pins it near 1.  Clipped to [0, 1] (estimates may jitter).
+    """
+    prev_card = jnp.asarray(prev_card, jnp.float32)
+    union_card = jnp.asarray(union_card, jnp.float32)
+    cur_card = jnp.asarray(cur_card, jnp.float32)
+    rate = (union_card - prev_card) / jnp.maximum(cur_card, 1.0)
+    return jnp.clip(rate, 0.0, 1.0)
+
+
+def new_talker_rate_exact(
+    prev: UniqueResult, cur: UniqueResult
+) -> jnp.ndarray:
+    """Exact-tier new-talker rate: membership of this window's distinct
+    sources against the previous distinct-source set (one binary-search
+    probe per key — both lists are already the sorted ``unique`` output)."""
+    member = isin(cur.values, prev.values, prev.n_unique, cur.n_unique)
+    cap = cur.values.shape[0]
+    live = jnp.arange(cap, dtype=jnp.int32) < jnp.asarray(cur.n_unique, jnp.int32)
+    n_new = jnp.sum((live & ~member).astype(jnp.int32))
+    return n_new.astype(jnp.float32) / jnp.maximum(
+        jnp.asarray(cur.n_unique, jnp.float32), 1.0
+    )
+
+
+def new_talker_rate_sketch(
+    prev_registers: jnp.ndarray, cur_registers: jnp.ndarray
+) -> jnp.ndarray:
+    """Sketch-tier new-talker rate from two HyperLogLog register banks.
+
+    The union cardinality is free — HLL registers merge by element-wise
+    max — so the rate is three :func:`repro.core.sketch.hll_cardinality`
+    calls on fixed-size state, never a pass over the raw keys.
+    """
+    from .sketch import hll_cardinality
+
+    prev_card = hll_cardinality(prev_registers)
+    union_card = hll_cardinality(jnp.maximum(prev_registers, cur_registers))
+    cur_card = hll_cardinality(cur_registers)
+    return new_talker_rate(prev_card, union_card, cur_card)
 
 
 def run_all_queries_naive(t: Table) -> QueryResults:

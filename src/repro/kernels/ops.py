@@ -26,12 +26,14 @@ from .flash_attention import flash_attention, flash_attention_pallas
 from .histogram import histogram_pallas
 from .segment_matmul import segment_matmul_pallas
 from .segreduce import segment_max_pallas
+from .sketch import cms_update_pallas
 
 __all__ = [
     "histogram",
     "windowed_histogram",
     "segmented_reduce",
     "segment_reduce",
+    "cms_update",
     "attention",
 ]
 
@@ -135,6 +137,33 @@ def segmented_reduce(
     return segment_max_pallas(
         vals, seg_ids, num_segments, init=init,
         interpret=(backend == "interpret"),
+    )
+
+
+def cms_update(
+    counts: jnp.ndarray,
+    col_ids: jnp.ndarray,
+    proposals: jnp.ndarray,
+    *,
+    backend: str = "auto",
+) -> jnp.ndarray:
+    """Conservative-update Count–Min fold — the approximate tier's scatter
+    (:mod:`repro.core.sketch`, DESIGN.md §2.6).
+
+    Cell-wise max of the running ``(depth, width)`` counts and the
+    scatter-max of ``proposals`` through each depth row's hashed
+    ``col_ids`` — one dispatch folds a whole batch into the sketch, the
+    same accumulate idiom as the histogram/segreduce ``init=`` paths.
+    """
+    if backend == "auto":
+        backend = "pallas" if (
+            jax.default_backend() == "tpu"
+            and counts.shape[1] <= _MATMUL_SEGMENT_LIMIT
+        ) else "xla"
+    if backend == "xla":
+        return ref.ref_cms_update(counts, col_ids, proposals)
+    return cms_update_pallas(
+        counts, col_ids, proposals, interpret=(backend == "interpret")
     )
 
 

@@ -22,6 +22,8 @@ __all__ = [
     "ref_histogram",
     "ref_segmented_reduce",
     "ref_segment_matmul",
+    "ref_cms_update",
+    "ref_hll_update",
     "ref_attention",
     "ref_bfs",
     "ref_cc",
@@ -77,6 +79,50 @@ def ref_segmented_reduce(
         )[:num_segments]
         return out if init is None else jnp.maximum(init.astype(jnp.float32), out)
     raise ValueError(f"unknown segmented-reduce op {op!r}")
+
+
+def ref_cms_update(
+    counts: jnp.ndarray,
+    col_ids: jnp.ndarray,
+    proposals: jnp.ndarray,
+) -> jnp.ndarray:
+    """Conservative-update CMS fold (oracle for kernels/sketch.py).
+
+    ``out[r, c] = max(counts[r, c], max over i with col_ids[r, i] == c of
+    proposals[i])`` — every depth row scatter-maxes the *same* proposal
+    vector through its own hashed columns; cells nothing maps to keep their
+    running value.  Out-of-range ids (incl. -1 = masked) are dropped.
+    """
+    depth, width = counts.shape
+    ids = col_ids.astype(jnp.int32)
+    ok = (ids >= 0) & (ids < width)
+    fused = jnp.where(
+        ok,
+        jnp.arange(depth, dtype=jnp.int32)[:, None] * width + ids,
+        depth * width,
+    )
+    props = jnp.broadcast_to(
+        proposals.astype(jnp.float32)[None, :], ids.shape
+    )
+    upd = jax.ops.segment_max(
+        jnp.where(ok, props, -jnp.inf).reshape(-1),
+        fused.reshape(-1),
+        num_segments=depth * width + 1,
+    )[: depth * width].reshape(depth, width)
+    return jnp.maximum(counts.astype(jnp.float32), upd)
+
+
+def ref_hll_update(
+    registers: jnp.ndarray,
+    reg_ids: jnp.ndarray,
+    rhos: jnp.ndarray,
+) -> jnp.ndarray:
+    """HyperLogLog register fold — segmented max with the running registers
+    as the accumulator (oracle for kernels/sketch.hll_update_pallas)."""
+    return ref_segmented_reduce(
+        rhos.astype(jnp.float32), reg_ids, registers.shape[0], "max",
+        init=registers,
+    )
 
 
 def ref_segment_matmul(

@@ -41,6 +41,15 @@ from ..challenge.pipeline import analyze as challenge_analyze
 from ..challenge.pipeline import distributed_scalar_queries
 from ..core.ops import factorize, groupby_aggregate, isin, mix32, multi_key_sort
 from ..core.plan import unique_concat
+from ..core.sketch import (
+    SketchConfig,
+    SketchSnapshot,
+    SketchState,
+    init_sketch,
+    merge_sketches,
+    snapshot_sketch,
+    update_sketch,
+)
 from ..core.sparse import ewise_union, from_coo
 from ..core.table import Table
 from ..data.pipeline import Prefetcher
@@ -81,6 +90,13 @@ class StreamConfig:
     ids at snapshot time — an overflowed state's results are unreliable,
     not merely lower bounds.  ``batch_capacity`` is the static micro-batch
     buffer size: re-jitting happens per capacity, never per batch occupancy.
+
+    ``tier`` selects the analytics substrate(s) every batch folds into
+    (DESIGN.md §2.6): ``"exact"`` is the CSR state above; ``"sketch"``
+    replaces it with the bounded-memory approximate tier
+    (:mod:`repro.core.sketch` — never overflows, answers carry error
+    bounds); ``"both"`` runs the tiers side by side (the validation mode:
+    the exact path is the sketch path's oracle while it still fits).
     """
 
     batch_capacity: int
@@ -90,17 +106,35 @@ class StreamConfig:
     ip_bins: int = 1024
     top_k: int = 10
     backend: str = "auto"                # histogram kernel dispatch
+    tier: str = "exact"                  # exact | sketch | both
+    sketch: Optional[SketchConfig] = None  # geometry of the approximate tier
 
     def __post_init__(self):
         for f in ("batch_capacity", "link_capacity", "ip_capacity",
                   "n_windows", "ip_bins", "top_k"):
             if getattr(self, f) is not None and getattr(self, f) < 1:
                 raise ValueError(f"{f} must be >= 1")
+        if self.tier not in ("exact", "sketch", "both"):
+            raise ValueError(
+                f"tier must be exact|sketch|both, got {self.tier!r}"
+            )
 
     @property
     def ips(self) -> int:
         # each link contributes at most 2 distinct IPs
         return self.ip_capacity or 2 * self.link_capacity
+
+    @property
+    def exact_enabled(self) -> bool:
+        return self.tier in ("exact", "both")
+
+    @property
+    def sketch_enabled(self) -> bool:
+        return self.tier in ("sketch", "both")
+
+    @property
+    def sketch_config(self) -> SketchConfig:
+        return self.sketch if self.sketch is not None else SketchConfig()
 
 
 # ---------------------------------------------------------------------------
@@ -419,16 +453,28 @@ def anonymization_mapping(state: StreamState) -> Tuple[np.ndarray, np.ndarray]:
 
 @dataclasses.dataclass
 class StreamSnapshot:
-    """Point-in-time query answer over everything streamed so far."""
+    """Point-in-time query answer over everything streamed so far.
 
-    results: ChallengeResults
+    ``results`` is the exact tier's answer (None when ``tier="sketch"``);
+    ``sketch`` the approximate tier's (None when ``tier="exact"``).
+    """
+
+    results: Optional[ChallengeResults]
     n_packets: int
     n_batches: int
     n_links: int
     n_ips: int
-    overflow: int           # > 0 => results unreliable (never silent):
-                            # dropped links undercount, dropped dictionary
-                            # entries alias ids — see StreamConfig
+    overflow: int           # > 0 => exact results unreliable (never
+                            # silent): dropped links undercount, dropped
+                            # dictionary entries alias ids — StreamConfig
+    sketch: Optional[SketchSnapshot] = None
+
+    @property
+    def reliable(self) -> bool:
+        """True iff the exact results can be trusted: nothing overflowed.
+        The sketch tier is outside this flag — it cannot overflow; its
+        answers are instead bounded by ``sketch.bounds``."""
+        return self.overflow == 0
 
 
 # ---------------------------------------------------------------------------
@@ -498,6 +544,13 @@ class StreamEngine:
                 _snapshot_results, top_k=cfg.top_k, backend=cfg.backend
             )
         )
+        self._sketch_state = (
+            init_sketch(cfg.sketch_config) if cfg.sketch_enabled else None
+        )
+        self._sketch_update = jax.jit(
+            functools.partial(update_sketch, backend=cfg.backend),
+            donate_argnums=donate,
+        ) if cfg.sketch_enabled else None
         self._algo = None  # jitted lazily: most streams never ask for it
         self.n_ingested = 0
 
@@ -506,13 +559,27 @@ class StreamEngine:
     def state(self) -> StreamState:
         return self._state
 
+    @property
+    def sketch_state(self) -> Optional[SketchState]:
+        return self._sketch_state
+
     def block(self) -> StreamState:
         jax.block_until_ready(self._state)
+        if self._sketch_state is not None:
+            jax.block_until_ready(self._sketch_state)
         return self._state
 
-    def merge_from(self, other: StreamState) -> None:
-        """Fold another shard's state into this engine (host-level merge)."""
-        self._state = merge_states(self._state, other)
+    def merge_from(
+        self, other: StreamState, sketch: Optional[SketchState] = None
+    ) -> None:
+        """Fold another shard's state into this engine (host-level merge).
+        Pass the shard's ``sketch_state`` too when the sketch tier is on."""
+        if self.cfg.exact_enabled:
+            self._state = merge_states(self._state, other)
+        if sketch is not None:
+            if self._sketch_state is None:
+                raise ValueError("sketch merge on a tier='exact' engine")
+            self._sketch_state = merge_sketches(self._sketch_state, sketch)
 
     # -- ingest --------------------------------------------------------------
     def ingest(self, src, dst, win, n_valid: Optional[int] = None) -> None:
@@ -528,8 +595,14 @@ class StreamEngine:
         self.ingest_padded(pad(src), pad(dst), pad(win), n)
 
     def ingest_padded(self, src, dst, win, n_valid: int) -> None:
-        """Fold a pre-padded (possibly already device-resident) micro-batch."""
-        self._state = self._update(self._state, src, dst, win, n_valid)
+        """Fold a pre-padded (possibly already device-resident) micro-batch
+        into every enabled tier."""
+        if self.cfg.exact_enabled:
+            self._state = self._update(self._state, src, dst, win, n_valid)
+        if self.cfg.sketch_enabled:
+            self._sketch_state = self._sketch_update(
+                self._sketch_state, src, dst, n_valid
+            )
         self.n_ingested += 1
 
     # -- queries -------------------------------------------------------------
@@ -541,19 +614,30 @@ class StreamEngine:
         only; raises on exchange overflow per the repo contract).
         """
         state = self._state
-        results = self._snap(state)
-        if distributed and len(jax.devices()) > 1:
-            results = dataclasses.replace(
-                results, scalars=distributed_scalar_queries(link_table(state))
-            )
-        jax.block_until_ready(results)
+        results = None
+        if self.cfg.exact_enabled:
+            results = self._snap(state)
+            if distributed and len(jax.devices()) > 1:
+                results = dataclasses.replace(
+                    results,
+                    scalars=distributed_scalar_queries(link_table(state)),
+                )
+            jax.block_until_ready(results)
+        sketch = None
+        if self._sketch_state is not None:
+            sketch = snapshot_sketch(self._sketch_state, k=self.cfg.top_k)
+        n_packets = int(state.n_packets) if self.cfg.exact_enabled \
+            else int(self._sketch_state.n_packets)
+        n_batches = int(state.n_batches) if self.cfg.exact_enabled \
+            else int(self._sketch_state.n_batches)
         return StreamSnapshot(
             results=results,
-            n_packets=int(state.n_packets),
-            n_batches=int(state.n_batches),
+            n_packets=n_packets,
+            n_batches=n_batches,
             n_links=int(state.n_links),
             n_ips=int(state.n_ips),
             overflow=int(state.overflow),
+            sketch=sketch,
         )
 
     def algorithms(self, source: int = 0):

@@ -21,22 +21,34 @@ from typing import Optional, Sequence
 import numpy as np
 
 from ..challenge.pipeline import window_column
-from ..challenge.run import format_extras, format_queries
+from ..challenge.run import format_extras, format_queries, format_sketch, verify_sketch
 from ..core.ref import ref_run_all_queries
+from ..core.sketch import SketchConfig
 from ..data.plq import read_plq, write_plq
 from ..data.rmat import synthetic_packets
+from ..data.scenarios import scenario_packets
 from .engine import StreamBatchTimings, StreamConfig, StreamEngine, steady_state, stream_plq
 
 
 def prepare_capture(
-    workdir: str, n_packets: int, scale: int, seed: int, batch: int
+    workdir: str, n_packets: int, scale: int, seed: int, batch: int,
+    scenario: str = "rmat",
 ) -> str:
-    """Generate-or-reuse a plq capture chunked into ``batch``-row groups."""
+    """Generate-or-reuse a plq capture chunked into ``batch``-row groups.
+
+    ``scenario`` selects the traffic generator: ``rmat`` background
+    (:func:`repro.data.rmat.synthetic_packets`) or one of the adversarial
+    generators in :mod:`repro.data.scenarios` (ddos/portscan/beacon/diurnal).
+    """
     path = os.path.join(
-        workdir, f"stream_s{scale}_n{n_packets}_seed{seed}_b{batch}.plq"
+        workdir,
+        f"stream_{scenario}_s{scale}_n{n_packets}_seed{seed}_b{batch}.plq",
     )
     if not os.path.exists(path):
-        cols = synthetic_packets(n_packets, scale=scale, seed=seed)
+        if scenario == "rmat":
+            cols = synthetic_packets(n_packets, scale=scale, seed=seed)
+        else:
+            cols = scenario_packets(scenario, n_packets, scale=scale, seed=seed)
         write_plq(path, cols, row_group_size=batch)
     return path
 
@@ -79,6 +91,24 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                          "(default 2*link_capacity: always exact)")
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "xla", "pallas", "interpret"])
+    ap.add_argument("--tier", default="exact",
+                    choices=["exact", "sketch", "both"],
+                    help="analytics substrate per batch: the exact CSR "
+                         "state, the bounded-memory sketch tier "
+                         "(never overflows; answers carry error bounds), "
+                         "or both side by side")
+    ap.add_argument("--sketch-depth", type=int, default=4,
+                    help="Count-Min depth (rows)")
+    ap.add_argument("--sketch-width", type=int, default=4096,
+                    help="Count-Min width (cells per row)")
+    ap.add_argument("--hll-p", type=int, default=12,
+                    help="HyperLogLog precision: 2^p registers")
+    ap.add_argument("--heavy-capacity", type=int, default=64,
+                    help="space-saving heavy-hitter counters")
+    ap.add_argument("--scenario", default="rmat",
+                    choices=["rmat", "ddos", "portscan", "beacon", "diurnal"],
+                    help="traffic generator (adversarial scenarios from "
+                         "repro.data.scenarios beyond the rmat background)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--workdir", default=None,
                     help="capture cache dir (tmp if unset)")
@@ -110,14 +140,22 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             ip_capacity=args.ip_capacity,
             n_windows=args.windows, ip_bins=args.ip_bins, top_k=args.top_k,
             backend=args.backend,
+            tier=args.tier,
+            sketch=SketchConfig(
+                cms_depth=args.sketch_depth, cms_width=args.sketch_width,
+                hll_p=args.hll_p, heavy_capacity=args.heavy_capacity,
+                seed=args.seed,
+            ) if args.tier != "exact" else None,
         )
     except ValueError as e:
         ap.error(str(e))
     print(f"streaming challenge: {n:,} packets in {args.batches} "
           f"micro-batches of <= {batch:,}, {args.windows} windows, "
-          f"link_capacity={cfg.link_capacity:,}")
+          f"link_capacity={cfg.link_capacity:,}, tier={cfg.tier}, "
+          f"scenario={args.scenario}")
 
-    path = prepare_capture(workdir, n, args.scale, args.seed, batch)
+    path = prepare_capture(workdir, n, args.scale, args.seed, batch,
+                           scenario=args.scenario)
     ts = read_plq(path, ["ts"])["ts"]
     win_full = window_column(ts, args.windows)
 
@@ -126,10 +164,17 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     def on_batch(i: int, eng: StreamEngine) -> None:
         if args.snapshot_every and (i + 1) % args.snapshot_every == 0:
             snap = eng.snapshot()
-            s = snap.results.scalars
-            print(f"[batch {i}] packets={snap.n_packets:,} "
-                  f"links={int(s.unique_links):,} ips={snap.n_ips:,} "
-                  f"max_fanout={int(s.max_source_fanout):,}", flush=True)
+            if snap.results is not None:
+                s = snap.results.scalars
+                print(f"[batch {i}] packets={snap.n_packets:,} "
+                      f"links={int(s.unique_links):,} ips={snap.n_ips:,} "
+                      f"max_fanout={int(s.max_source_fanout):,}", flush=True)
+            else:
+                sk = snap.sketch
+                print(f"[batch {i}] packets={snap.n_packets:,} "
+                      f"links~{sk.unique_links:,.0f} "
+                      f"sources~{sk.unique_sources:,.0f} (sketch)",
+                      flush=True)
 
     timings = stream_plq(
         engine, path, win_full,
@@ -138,17 +183,22 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     print("\n" + format_timings(timings))
 
     snap = engine.snapshot(distributed=args.distributed)
-    print()
-    print(format_queries(snap.results))
-    print(format_extras(snap.results, args.windows))
-    print(f"\nstate: {snap.n_links:,} accumulated links, {snap.n_ips:,} "
-          f"dictionary entries, {snap.n_batches} batches, "
-          f"overflow={snap.overflow}")
+    if snap.results is not None:
+        print()
+        print(format_queries(snap.results))
+        print(format_extras(snap.results, args.windows))
+        print(f"\nstate: {snap.n_links:,} accumulated links, {snap.n_ips:,} "
+              f"dictionary entries, {snap.n_batches} batches, "
+              f"overflow={snap.overflow}")
+    if snap.sketch is not None:
+        print(format_sketch(snap.sketch))
 
-    if snap.overflow:
-        print(f"state overflow: {snap.overflow} dropped entries — results "
-              "are unreliable (dropped links undercount, dropped dictionary "
-              "entries alias ids); raise --link-capacity/--ip-capacity",
+    if snap.results is not None and snap.overflow:
+        print(f"state overflow: {snap.overflow} dropped entries — exact "
+              "results are unreliable (dropped links undercount, dropped "
+              "dictionary entries alias ids); raise --link-capacity/"
+              "--ip-capacity, or stream with --tier sketch (bounded error "
+              "instead of bounded exactness)",
               file=sys.stderr)
         return 1
     if args.verify:
@@ -156,17 +206,23 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         ref = ref_run_all_queries(cols["src"].astype(np.int64),
                                   cols["dst"].astype(np.int64))
         bad = 0
-        for k, v in ref.items():
-            got = int(getattr(snap.results.scalars, k))
-            if got != v:
-                print(f"MISMATCH {k}: stream={got} oracle={v}",
-                      file=sys.stderr)
-                bad += 1
+        if snap.results is not None:
+            for k, v in ref.items():
+                got = int(getattr(snap.results.scalars, k))
+                if got != v:
+                    print(f"MISMATCH {k}: stream={got} oracle={v}",
+                          file=sys.stderr)
+                    bad += 1
+        if snap.sketch is not None:
+            bad += verify_sketch(snap.sketch, ref)
         if bad:
-            print(f"\n{bad} scalar(s) disagree with the oracle",
+            print(f"\n{bad} result(s) disagree with the oracle",
                   file=sys.stderr)
             return 1
-        print("\nall scalar queries match the NumPy oracle ✓")
+        if snap.results is not None:
+            print("\nall scalar queries match the NumPy oracle ✓")
+        if snap.sketch is not None:
+            print("all sketch estimates within their configured bounds ✓")
     return 0
 
 

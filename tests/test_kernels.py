@@ -7,7 +7,15 @@ from _hypothesis_compat import given, settings, st
 
 from repro.kernels.flash_attention import flash_attention, flash_attention_pallas
 from repro.kernels.histogram import histogram_pallas
-from repro.kernels.ref import ref_attention, ref_histogram, ref_segment_matmul
+from repro.kernels.ops import cms_update
+from repro.kernels.sketch import cms_update_pallas, hll_update_pallas
+from repro.kernels.ref import (
+    ref_attention,
+    ref_cms_update,
+    ref_histogram,
+    ref_hll_update,
+    ref_segment_matmul,
+)
 from repro.kernels.segment_matmul import segment_matmul_pallas
 
 RNG = np.random.default_rng(0)
@@ -144,3 +152,100 @@ def test_flash_attention_grad_matches_ref():
     g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
     for a, b in zip(g1, g2):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-3)
+
+
+# ------------------------------------------------------------- sketch kernels
+
+@pytest.mark.parametrize("n", [1, 100, 1024, 5000])
+@pytest.mark.parametrize("depth,width", [(1, 64), (4, 512), (3, 1000)])
+def test_cms_update_sweep(n, depth, width):
+    counts = RNG.integers(0, 50, (depth, width)).astype(np.float32)
+    # incl. out-of-range ids and -1 = masked proposal, per the contract
+    ids = RNG.integers(-2, width + 2, (depth, n)).astype(np.int32)
+    props = RNG.integers(1, 100, n).astype(np.float32)
+    got = cms_update_pallas(
+        jnp.asarray(counts), jnp.asarray(ids), jnp.asarray(props),
+        interpret=True,
+    )
+    want = ref_cms_update(jnp.asarray(counts), jnp.asarray(ids),
+                          jnp.asarray(props))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # cells never fall below their running value (init semantics)
+    assert (np.asarray(got) >= counts).all()
+
+
+def test_cms_update_empty_proposals_is_identity():
+    counts = RNG.integers(0, 9, (4, 128)).astype(np.float32)
+    got = cms_update_pallas(
+        jnp.asarray(counts),
+        jnp.zeros((4, 0), jnp.int32),
+        jnp.zeros((0,), jnp.float32),
+        interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(got), counts)
+
+
+def test_cms_update_all_masked_is_identity():
+    counts = RNG.integers(0, 9, (2, 64)).astype(np.float32)
+    ids = np.full((2, 33), -1, np.int32)
+    props = RNG.integers(1, 9, 33).astype(np.float32)
+    got = cms_update_pallas(jnp.asarray(counts), jnp.asarray(ids),
+                            jnp.asarray(props), interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), counts)
+
+
+@pytest.mark.parametrize("block_props,block_width", [(256, 128), (1024, 512), (128, 1024)])
+def test_cms_update_block_shapes(block_props, block_width):
+    counts = RNG.integers(0, 20, (4, 900)).astype(np.float32)
+    ids = RNG.integers(0, 900, (4, 3000)).astype(np.int32)
+    props = RNG.integers(1, 50, 3000).astype(np.float32)
+    got = cms_update_pallas(
+        jnp.asarray(counts), jnp.asarray(ids), jnp.asarray(props),
+        block_props=block_props, block_width=block_width, interpret=True,
+    )
+    want = ref_cms_update(jnp.asarray(counts), jnp.asarray(ids),
+                          jnp.asarray(props))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(st.lists(st.tuples(st.integers(-1, 63), st.integers(1, 40)),
+                min_size=1, max_size=200))
+@settings(max_examples=15, deadline=None)
+def test_cms_update_property(pairs):
+    ids = np.array([p[0] for p in pairs], np.int32)[None, :]
+    props = np.array([p[1] for p in pairs], np.float32)
+    counts = np.zeros((1, 64), np.float32)
+    got = np.asarray(cms_update_pallas(
+        jnp.asarray(counts), jnp.asarray(ids), jnp.asarray(props),
+        interpret=True))
+    want = np.zeros(64)
+    for c, p in pairs:
+        if c >= 0:
+            want[c] = max(want[c], p)
+    np.testing.assert_array_equal(got[0], want)
+
+
+@pytest.mark.parametrize("n", [1, 500, 4096])
+@pytest.mark.parametrize("m", [16, 1024])
+def test_hll_update_sweep(n, m):
+    regs = RNG.integers(0, 20, m).astype(np.float32)
+    ids = RNG.integers(-2, m + 2, n).astype(np.int32)
+    rhos = RNG.integers(1, 33, n).astype(np.float32)
+    got = hll_update_pallas(jnp.asarray(regs), jnp.asarray(ids),
+                            jnp.asarray(rhos), interpret=True)
+    want = ref_hll_update(jnp.asarray(regs), jnp.asarray(ids),
+                          jnp.asarray(rhos))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert (np.asarray(got) >= regs).all()  # registers only ever grow
+
+
+def test_cms_update_dispatch_backends_agree():
+    counts = RNG.integers(0, 10, (4, 256)).astype(np.float32)
+    ids = RNG.integers(-1, 256, (4, 777)).astype(np.int32)
+    props = RNG.integers(1, 30, 777).astype(np.float32)
+    outs = [
+        np.asarray(cms_update(jnp.asarray(counts), jnp.asarray(ids),
+                              jnp.asarray(props), backend=b))
+        for b in ("xla", "interpret")
+    ]
+    np.testing.assert_array_equal(outs[0], outs[1])

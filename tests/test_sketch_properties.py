@@ -1,0 +1,361 @@
+"""Property tier for the sketch-based analytics substrate (core/sketch.py).
+
+Every classical guarantee the module docstring claims is machine-checked
+here against brute-force NumPy truth, across seeded pseudo-random traffic
+(via the tests/_hypothesis_compat.py shim — real hypothesis when the dev
+extra is installed, deterministic seeded examples otherwise):
+
+  * Count–Min (conservative update): estimates NEVER underestimate, and
+    overestimate by at most εN = (e/width)·N at the tested geometries;
+    CU merges by addition without breaking the lower-bound invariant.
+  * HyperLogLog: relative cardinality error within the configured
+    ``hll_sigma``·1.04/sqrt(m) tolerance vs exact ``unique_*``.
+  * Space-saving: the superset guarantee (every key with true count
+    > N/(capacity+1) is present), per-key ``count <= true <= count +
+    offset``, and ``offset <= N/(capacity+1)``.
+  * Merges: CMS and HLL are associative AND commutative bit-identically
+    (integer-valued fp32 counts below 2^24 add exactly); the heavy-hitter
+    fold is commutative bit-identically and associative up to its bound —
+    mirroring the 3-state merge properties of tests/test_sparse.py /
+    tests/test_stream.py.
+"""
+import collections
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.sketch import (
+    SketchConfig,
+    SketchState,
+    error_bounds,
+    estimate_link_packets,
+    estimate_source_packets,
+    heavy_links,
+    heavy_talkers,
+    hll_cardinality,
+    init_sketch,
+    merge_sketches,
+    sketch_scalars,
+    snapshot_sketch,
+    update_sketch,
+)
+
+CFG = SketchConfig(cms_depth=4, cms_width=512, hll_p=10, heavy_capacity=32,
+                   seed=5)
+CAP = 512  # fixed batch capacity: one jit trace shape across every example
+
+
+def _traffic(seed: int, n: int, n_keys: int):
+    """Zipf-skewed (src, dst) traffic — heavy hitters exist by construction."""
+    rng = np.random.default_rng(seed)
+    src = rng.zipf(1.4, n).astype(np.int64) % n_keys
+    dst = rng.zipf(1.4, n).astype(np.int64) % n_keys
+    return src.astype(np.int32), dst.astype(np.int32)
+
+
+def _fold(state: SketchState, src, dst) -> SketchState:
+    """Fold arrays through update_sketch in CAP-row padded micro-batches."""
+    for off in range(0, len(src), CAP):
+        s, d = src[off:off + CAP], dst[off:off + CAP]
+        n = len(s)
+        state = update_sketch(
+            state,
+            jnp.asarray(np.pad(s, (0, CAP - n)), jnp.int32),
+            jnp.asarray(np.pad(d, (0, CAP - n)), jnp.int32),
+            n, backend="xla",
+        )
+    return state
+
+
+def _truth(src, dst):
+    links = collections.Counter(zip(src.tolist(), dst.tolist()))
+    sources = collections.Counter(src.tolist())
+    return links, sources
+
+
+# ------------------------------------------------------------- Count–Min
+
+@given(st.integers(0, 10_000), st.integers(200, 2000))
+@settings(max_examples=12, deadline=None)
+def test_cms_never_underestimates_and_within_eps_n(seed, n):
+    src, dst = _traffic(seed, n, 300)
+    state = _fold(init_sketch(CFG), src, dst)
+    links, sources = _truth(src, dst)
+    eps_n = error_bounds(state)["cms_epsilon_n"]
+    assert eps_n == pytest.approx(np.e / CFG.cms_width * n)
+
+    keys = list(links)
+    est = np.asarray(estimate_link_packets(
+        state, jnp.asarray([k[0] for k in keys], jnp.int32),
+        jnp.asarray([k[1] for k in keys], jnp.int32)))
+    true = np.asarray([links[k] for k in keys], np.float64)
+    assert (est >= true).all(), "CMS link estimate underestimated"
+    assert (est <= true + eps_n).all(), "CMS link estimate beyond εN"
+
+    skeys = sorted(sources)
+    est_s = np.asarray(estimate_source_packets(
+        state, jnp.asarray(skeys, jnp.int32)))
+    true_s = np.asarray([sources[k] for k in skeys], np.float64)
+    assert (est_s >= true_s).all()
+    assert (est_s <= true_s + eps_n).all()
+
+
+def test_cms_unseen_keys_bounded_by_eps_n():
+    src, dst = _traffic(0, 1500, 300)
+    state = _fold(init_sketch(CFG), src, dst)
+    eps_n = error_bounds(state)["cms_epsilon_n"]
+    # keys far outside the traffic domain: true count 0
+    probe = jnp.arange(10_000, 10_128, dtype=jnp.int32)
+    est = np.asarray(estimate_source_packets(state, probe))
+    assert (est >= 0).all() and (est <= eps_n).all()
+
+
+def test_cms_conservative_update_tighter_within_batch_duplicates():
+    """The CU rule must group per key first: a key appearing k times in one
+    batch reads estimate e once and proposes e + k (not e + 1 k times)."""
+    src = np.full(20, 7, np.int32)
+    dst = np.full(20, 9, np.int32)
+    state = _fold(init_sketch(CFG), src, dst)
+    est = float(estimate_link_packets(
+        state, jnp.asarray([7], jnp.int32), jnp.asarray([9], jnp.int32))[0])
+    assert est == 20.0
+
+
+# ----------------------------------------------------------- HyperLogLog
+
+@given(st.integers(0, 10_000), st.integers(100, 3000))
+@settings(max_examples=12, deadline=None)
+def test_hll_within_relative_tolerance(seed, n):
+    src, dst = _traffic(seed, n, 800)
+    state = _fold(init_sketch(CFG), src, dst)
+    tol = error_bounds(state, hll_sigma=CFG.hll_sigma)["hll_rel_tolerance"]
+    for regs, exact in [
+        (state.hll_src, len(set(src.tolist()))),
+        (state.hll_dst, len(set(dst.tolist()))),
+        (state.hll_links, len(set(zip(src.tolist(), dst.tolist())))),
+    ]:
+        est = float(hll_cardinality(regs))
+        assert abs(est - exact) / exact <= tol, (est, exact, tol)
+
+
+def test_hll_empty_state_estimates_zero():
+    assert float(hll_cardinality(init_sketch(CFG).hll_src)) == 0.0
+
+
+# ---------------------------------------------------------- space-saving
+
+@given(st.integers(0, 10_000), st.integers(500, 4000))
+@settings(max_examples=12, deadline=None)
+def test_space_saving_superset_and_bounds(seed, n):
+    src, dst = _traffic(seed, n, 400)
+    state = _fold(init_sketch(CFG), src, dst)
+    links, sources = _truth(src, dst)
+    cap = CFG.heavy_capacity
+    bound = n / (cap + 1)
+
+    for (keys, counts, offset), truth in [
+        (((state.hh_src_key,), state.hh_src_count, state.hh_src_offset),
+         sources),
+        (((state.hh_link_src, state.hh_link_dst), state.hh_link_count,
+          state.hh_link_offset), links),
+    ]:
+        off = int(offset)
+        assert off <= bound, "space-saving offset beyond N/(capacity+1)"
+        live = np.asarray(counts) > 0
+        stored = set()
+        for i in np.nonzero(live)[0]:
+            key = tuple(int(np.asarray(k)[i]) for k in keys)
+            key = key[0] if len(key) == 1 else key
+            stored.add(key)
+            true = truth.get(key, 0)
+            c = int(np.asarray(counts)[i])
+            assert c <= true <= c + off, (key, c, true, off)
+        must_be_present = {k for k, c in truth.items() if c > bound}
+        assert must_be_present <= stored, (
+            "superset guarantee violated", must_be_present - stored)
+
+
+def test_space_saving_estimate_never_underestimates():
+    src, dst = _traffic(3, 2000, 200)
+    state = _fold(init_sketch(CFG), src, dst)
+    _, sources = _truth(src, dst)
+    keys, est, n_live = heavy_talkers(state)
+    for i in range(int(n_live)):
+        k = int(np.asarray(keys)[i])
+        assert int(np.asarray(est)[i]) >= sources.get(k, 0)
+
+
+# ---------------------------------------------------------------- merges
+
+def _parts(seed: int):
+    src, dst = _traffic(seed, 1800, 300)
+    cuts = [600, 1200]
+    return [(src[a:b], dst[a:b])
+            for a, b in zip([0, *cuts], [*cuts, len(src)])]
+
+
+def _fields(state: SketchState, names):
+    return [np.asarray(getattr(state, f)) for f in names]
+
+
+_CMS_HLL = ["cms_links", "cms_sources", "hll_src", "hll_dst", "hll_links"]
+_HEAVY = ["hh_link_src", "hh_link_dst", "hh_link_count", "hh_link_offset",
+          "hh_src_key", "hh_src_count", "hh_src_offset"]
+_COUNTERS = ["n_packets", "n_batches"]
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=8, deadline=None)
+def test_merge_commutative_bit_identical(seed):
+    parts = _parts(seed)
+    a = _fold(init_sketch(CFG), *parts[0])
+    b = _fold(init_sketch(CFG), *parts[1])
+    ab, ba = merge_sketches(a, b), merge_sketches(b, a)
+    for f, x, y in zip(_CMS_HLL + _HEAVY + _COUNTERS,
+                       _fields(ab, _CMS_HLL + _HEAVY + _COUNTERS),
+                       _fields(ba, _CMS_HLL + _HEAVY + _COUNTERS)):
+        np.testing.assert_array_equal(x, y, err_msg=f)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=8, deadline=None)
+def test_merge_associative_bit_identical_cms_hll(seed):
+    """(a⊕b)⊕c == a⊕(b⊕c) bit-identically for CMS (integer-valued fp32
+    adds exactly) and HLL (max is associative); the heavy-hitter tables are
+    associative only up to their bound (the decrement schedule depends on
+    grouping) and are covered by the guarantee-level test below."""
+    parts = _parts(seed)
+    a, b, c = (_fold(init_sketch(CFG), *p) for p in parts)
+    left = merge_sketches(merge_sketches(a, b), c)
+    right = merge_sketches(a, merge_sketches(b, c))
+    for f, x, y in zip(_CMS_HLL + _COUNTERS,
+                       _fields(left, _CMS_HLL + _COUNTERS),
+                       _fields(right, _CMS_HLL + _COUNTERS)):
+        np.testing.assert_array_equal(x, y, err_msg=f)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=6, deadline=None)
+def test_merge_any_order_preserves_guarantees(seed):
+    """Every merge order/grouping of 3 shards keeps all three summaries
+    sound: CMS never underestimates the global truth, HLL within tolerance,
+    space-saving superset + offset bounds for the merged totals."""
+    parts = _parts(seed)
+    src = np.concatenate([p[0] for p in parts])
+    dst = np.concatenate([p[1] for p in parts])
+    links, sources = _truth(src, dst)
+    n = len(src)
+    states = [_fold(init_sketch(CFG), *p) for p in parts]
+
+    def build(order, grouping):
+        s = [states[i] for i in order]
+        if grouping == "left":
+            return merge_sketches(merge_sketches(s[0], s[1]), s[2])
+        return merge_sketches(s[0], merge_sketches(s[1], s[2]))
+
+    for order, grouping in [((0, 1, 2), "left"), ((2, 0, 1), "right"),
+                            ((1, 2, 0), "left")]:
+        m = build(order, grouping)
+        assert int(m.n_packets) == n
+        skeys = sorted(sources)
+        est = np.asarray(estimate_source_packets(
+            m, jnp.asarray(skeys, jnp.int32)))
+        true = np.asarray([sources[k] for k in skeys], np.float64)
+        assert (est >= true).all()
+        tol = error_bounds(m)["hll_rel_tolerance"]
+        exact = len(set(src.tolist()))
+        assert abs(float(hll_cardinality(m.hll_src)) - exact) / exact <= tol
+        off = int(m.hh_src_offset)
+        assert off <= n / (CFG.heavy_capacity + 1)
+        live = np.asarray(m.hh_src_count) > 0
+        for i in np.nonzero(live)[0]:
+            k = int(np.asarray(m.hh_src_key)[i])
+            c = int(np.asarray(m.hh_src_count)[i])
+            assert c <= sources.get(k, 0) <= c + off
+
+
+def test_merge_identity():
+    src, dst = _traffic(11, 1000, 200)
+    s = _fold(init_sketch(CFG), src, dst)
+    names = _CMS_HLL + _HEAVY + _COUNTERS
+    for m in (merge_sketches(init_sketch(CFG), s),
+              merge_sketches(s, init_sketch(CFG))):
+        for f, x, y in zip(names, _fields(m, names), _fields(s, names)):
+            np.testing.assert_array_equal(x, y, err_msg=f)
+
+
+def test_merge_rejects_mismatched_geometry_or_seed():
+    s = init_sketch(CFG)
+    for other in [
+        SketchConfig(cms_depth=CFG.cms_depth + 1, cms_width=CFG.cms_width,
+                     hll_p=CFG.hll_p, heavy_capacity=CFG.heavy_capacity,
+                     seed=CFG.seed),
+        SketchConfig(cms_depth=CFG.cms_depth, cms_width=CFG.cms_width,
+                     hll_p=CFG.hll_p + 1, heavy_capacity=CFG.heavy_capacity,
+                     seed=CFG.seed),
+        SketchConfig(cms_depth=CFG.cms_depth, cms_width=CFG.cms_width,
+                     hll_p=CFG.hll_p, heavy_capacity=CFG.heavy_capacity + 1,
+                     seed=CFG.seed),
+        SketchConfig(cms_depth=CFG.cms_depth, cms_width=CFG.cms_width,
+                     hll_p=CFG.hll_p, heavy_capacity=CFG.heavy_capacity,
+                     seed=CFG.seed + 1),
+    ]:
+        with pytest.raises(ValueError):
+            merge_sketches(s, init_sketch(other))
+
+
+# ------------------------------------------------- scalars and snapshot
+
+def test_sketch_scalars_max_estimates_bounded():
+    src, dst = _traffic(21, 3000, 150)
+    state = _fold(init_sketch(CFG), src, dst)
+    links, sources = _truth(src, dst)
+    b = error_bounds(state)
+    s = sketch_scalars(state)
+    assert int(s["valid_packets"]) == 3000
+    true_max_link = max(links.values())
+    est = float(s["max_link_packets"])
+    assert true_max_link - b["heavy_link_offset"] <= est
+    assert est <= true_max_link + b["cms_epsilon_n"]
+    true_max_src = max(sources.values())
+    est = float(s["max_source_packets"])
+    assert true_max_src - b["heavy_src_offset"] <= est
+    assert est <= true_max_src + b["cms_epsilon_n"]
+
+
+def test_snapshot_is_host_side_and_reliable():
+    src, dst = _traffic(31, 800, 100)
+    state = _fold(init_sketch(CFG), src, dst)
+    snap = snapshot_sketch(state, k=5)
+    assert snap.overflow == 0 and snap.reliable
+    assert snap.n_packets == 800 and snap.n_batches == 2
+    assert snap.n_top_talkers <= 5 and snap.n_top_links <= 5
+    assert isinstance(snap.top_talker_src, np.ndarray)
+    # heavy-hitter report is in descending estimate order
+    tk = snap.top_talker_packets[:snap.n_top_talkers]
+    assert (np.diff(tk) <= 0).all()
+    assert set(snap.bounds) >= {
+        "cms_epsilon_n", "cms_delta", "hll_rel_tolerance",
+        "heavy_offset_bound", "heavy_link_offset", "heavy_src_offset",
+    }
+
+
+def test_update_ignores_padding_and_counts_weights():
+    state = init_sketch(CFG)
+    src = np.zeros(CAP, np.int32)
+    dst = np.zeros(CAP, np.int32)
+    src[:3] = [1, 2, 3]
+    dst[:3] = [4, 5, 6]
+    w = np.ones(CAP, np.int32) * 7
+    state = update_sketch(
+        state, jnp.asarray(src), jnp.asarray(dst), 3,
+        weights=jnp.asarray(w), backend="xla",
+    )
+    assert int(state.n_packets) == 21  # 3 valid rows × weight 7
+    est = float(estimate_link_packets(
+        state, jnp.asarray([1], jnp.int32), jnp.asarray([4], jnp.int32))[0])
+    assert est >= 7.0
+    # padding rows (src=dst=0 beyond n_valid) must not be folded in
+    assert float(hll_cardinality(state.hll_src)) == pytest.approx(3, abs=1)

@@ -395,3 +395,162 @@ def test_stream_cli_smoke(tmp_path, capsys):
     assert "14 max destination fan-in" in out
     assert "steady state" in out
     assert "all scalar queries match the NumPy oracle" in out
+
+
+# --------------------------------------------------- sketch tier vs exact
+
+def _ddos_capture(n=1 << 12, scale=10, seed=0, n_windows=3):
+    from repro.data.scenarios import scenario_packets
+
+    cols = scenario_packets("ddos", n, scale=scale, seed=seed)
+    return (cols["src"].astype(np.int32), cols["dst"].astype(np.int32),
+            window_column(cols["ts"], n_windows), cols)
+
+
+def test_stream_ddos_overflow_counted_never_silent():
+    """The adversarial fan-in scenario blows a small exact budget: the
+    engine must count every dropped entry and flag the snapshot, never
+    silently truncate."""
+    src, dst, win, _ = _ddos_capture()
+    eng = _stream(src, dst, win, batch=512, link_capacity=64)
+    snap = eng.snapshot()
+    distinct = len(set(zip(src.tolist(), dst.tolist())))
+    assert snap.overflow > 0
+    assert snap.overflow >= distinct - 64  # every drop counted
+    assert snap.n_links == 64              # clamped at capacity, not beyond
+    assert not snap.reliable               # flagged on the snapshot itself
+
+
+def test_stream_sketch_tier_absorbs_ddos_beyond_10x_exact_capacity():
+    """ISSUE acceptance: at 10x the exact tier's capacity, tier='both' must
+    show the exact tier overflowing (counted, unreliable) while the sketch
+    tier answers the full scalar suite with zero overflow and every
+    estimate inside its configured bound."""
+    from repro.core.sketch import SketchConfig
+
+    src, dst, win, _ = _ddos_capture()
+    capacity = 64
+    distinct = len(set(zip(src.tolist(), dst.tolist())))
+    assert distinct > 10 * capacity  # the scenario really is adversarial
+
+    eng = _stream(src, dst, win, batch=512, link_capacity=capacity,
+                  tier="both", sketch=SketchConfig(seed=0))
+    snap = eng.snapshot()
+
+    assert snap.overflow > 0 and not snap.reliable   # exact tier: overrun
+    sk = snap.sketch
+    assert sk is not None
+    assert sk.overflow == 0 and sk.reliable          # sketch tier: never
+
+    ref = ref_run_all_queries(src.astype(np.int64), dst.astype(np.int64))
+    b = sk.bounds
+    assert sk.n_packets == ref["valid_packets"]      # counters stay exact
+    for name, est in [("n_unique_sources", sk.unique_sources),
+                      ("n_unique_destinations", sk.unique_destinations),
+                      ("unique_links", sk.unique_links)]:
+        want = ref[name]
+        assert abs(est - want) / want <= b["hll_rel_tolerance"], (name, est, want)
+    assert (ref["max_link_packets"] - b["heavy_link_offset"]
+            <= sk.max_link_packets
+            <= ref["max_link_packets"] + b["cms_epsilon_n"])
+    assert (ref["max_source_packets"] - b["heavy_src_offset"]
+            <= sk.max_source_packets
+            <= ref["max_source_packets"] + b["cms_epsilon_n"])
+    # heavy-hitter report stays well-formed under the adversarial load:
+    # descending estimates, and each estimate never underestimates truth
+    links = collections.Counter(zip(src.tolist(), dst.tolist()))
+    tl = sk.top_link_packets[:sk.n_top_links]
+    assert (np.diff(tl) <= 0).all()
+    for i in range(sk.n_top_links):
+        key = (int(sk.top_link_src[i]), int(sk.top_link_dst[i]))
+        assert tl[i] >= links.get(key, 0)
+
+
+def test_stream_tier_sketch_only_never_overflows():
+    from repro.core.sketch import SketchConfig
+
+    src, dst, win, _ = _ddos_capture()
+    eng = _stream(src, dst, win, batch=512, link_capacity=8,
+                  tier="sketch", sketch=SketchConfig(seed=0))
+    snap = eng.snapshot()
+    assert snap.results is None       # no exact tier ran
+    assert snap.overflow == 0 and snap.reliable
+    assert snap.sketch is not None
+    assert snap.sketch.n_packets == len(src)
+
+
+def test_detection_queries_agree_across_tiers():
+    """top-k drift + new-talker rate run on either tier and tell the same
+    story: background→background is quiet, background→DDoS lights up."""
+    from repro.core.queries import (
+        new_talker_rate_exact,
+        new_talker_rate_sketch,
+        top_k_drift,
+    )
+    from repro.core.ops import unique
+    from repro.core.sketch import (
+        SketchConfig,
+        heavy_talkers,
+        init_sketch,
+        update_sketch,
+    )
+
+    n = 1 << 11
+    bg_src, bg_dst, _, _ = _capture(n=n, seed=1)
+    bg2_src, bg2_dst, _, _ = _capture(n=n, seed=1)  # identical window
+    at_src, at_dst, _, _ = _ddos_capture(n=n, seed=2)
+
+    def sk(s, d):
+        state = init_sketch(SketchConfig(seed=0))
+        return update_sketch(state, jnp.asarray(s), jnp.asarray(d),
+                             len(s), backend="xla")
+
+    s_bg, s_bg2, s_at = sk(bg_src, bg_dst), sk(bg2_src, bg2_dst), sk(at_src, at_dst)
+
+    # --- new-talker rate: sketch vs exact, quiet vs attack
+    def exact_rate(prev_src, cur_src):
+        return float(new_talker_rate_exact(
+            unique(jnp.asarray(prev_src), len(prev_src)),
+            unique(jnp.asarray(cur_src), len(cur_src))))
+
+    quiet_exact = exact_rate(bg_src, bg2_src)
+    quiet_sketch = float(new_talker_rate_sketch(s_bg.hll_src, s_bg2.hll_src))
+    attack_exact = exact_rate(bg_src, at_src)
+    attack_sketch = float(new_talker_rate_sketch(s_bg.hll_src, s_at.hll_src))
+    assert quiet_exact == 0.0                    # same window: nobody new
+    assert quiet_sketch <= 0.1                   # HLL jitter only
+    # spoofed sources are uniform over the 2^scale vertex space, so about
+    # half of them are genuinely new relative to the power-law background
+    assert attack_exact > 0.4
+    assert abs(attack_sketch - attack_exact) <= 0.15
+    assert attack_sketch - quiet_sketch > 0.3    # the detector separates
+
+    # --- top-k drift over the sketch tier's heavy-talker tables.  A
+    # bounded attacker pool (not the spoofed flood — spoofed sources are
+    # all singletons) shoves the background hubs out of the top-10.
+    from repro.data.scenarios import scenario_packets
+
+    pool = scenario_packets("ddos", n, scale=10, seed=2, n_attackers=8)
+    s_pool = sk(pool["src"].astype(np.int32), pool["dst"].astype(np.int32))
+
+    def top10(state):
+        keys, _, n_live = heavy_talkers(state)  # descending estimates
+        return [keys[:10]], jnp.minimum(n_live, 10)
+
+    quiet_drift = float(top_k_drift(*top10(s_bg), *top10(s_bg2)))
+    attack_drift = float(top_k_drift(*top10(s_bg), *top10(s_pool)))
+    assert quiet_drift == 0.0                    # identical tables
+    assert 0.0 <= attack_drift <= 1.0
+    assert attack_drift > quiet_drift + 0.5      # hubs displaced wholesale
+
+
+def test_stream_cli_sketch_tier_rides_through_overflow(tmp_path):
+    """Same undersized budget that exits 1 on the exact tier (see
+    test_stream_cli_overflow_exit_code) passes on --tier sketch: bounded
+    error instead of bounded exactness."""
+    from repro.stream.run import main
+
+    rc = main(["--scale", "9", "--batches", "2", "--link-capacity", "16",
+               "--tier", "sketch", "--scenario", "ddos",
+               "--workdir", str(tmp_path)])
+    assert rc == 0
