@@ -85,7 +85,8 @@ class SketchConfig:
     """Static geometry of one sketch tier.
 
     Memory is fixed by these at configuration time: the CMS holds
-    ``2 · cms_depth · cms_width`` float32 cells, HLL ``3 · 2^hll_p``
+    ``2 · cms_depth · cms_width`` int32 cells (exact counts up to 2^31-1,
+    the ``n_packets`` counter's own ceiling), HLL ``3 · 2^hll_p``
     float32 registers, and the heavy-hitter tables ``O(heavy_capacity)``
     int32 entries — independent of how much traffic is folded in.  The
     error bounds they imply (see :func:`error_bounds`):
@@ -147,9 +148,12 @@ class SketchState:
     ``int32 max`` and count 0.
     """
 
-    # Count–Min (conservative update): per-link and per-source packets
-    cms_links: jnp.ndarray       # (depth, width) float32
-    cms_sources: jnp.ndarray     # (depth, width) float32
+    # Count–Min (conservative update): per-link and per-source packets.
+    # int32 cells: counts stay exact up to 2^31-1 (the same ceiling as the
+    # n_packets counter) — float32 would silently round past 2^24 and
+    # break the never-underestimate guarantee.
+    cms_links: jnp.ndarray       # (depth, width) int32
+    cms_sources: jnp.ndarray     # (depth, width) int32
     # HyperLogLog registers
     hll_src: jnp.ndarray         # (m,) float32
     hll_dst: jnp.ndarray         # (m,) float32
@@ -199,22 +203,34 @@ jax.tree_util.register_dataclass(
 
 
 def init_sketch(cfg: SketchConfig) -> SketchState:
-    """The empty (identity) state: ``merge(init, s) == s`` for any ``s``."""
-    zero = jnp.zeros((), jnp.int32)
-    cms = jnp.zeros((cfg.cms_depth, cfg.cms_width), jnp.float32)
-    regs = jnp.zeros((cfg.hll_m,), jnp.float32)
+    """The empty (identity) state: ``merge(init, s) == s`` for any ``s``.
+
+    Every leaf is a freshly allocated buffer — no two pytree leaves may
+    alias, because ``StreamEngine`` jits ``update_sketch`` with
+    ``donate_argnums=(0,)`` off-CPU and XLA rejects donating the same
+    buffer twice (tests/test_sketch_properties.py locks the invariant).
+    """
+    def cms():
+        return jnp.zeros((cfg.cms_depth, cfg.cms_width), jnp.int32)
+
+    def regs():
+        return jnp.zeros((cfg.hll_m,), jnp.float32)
+
+    def zero():
+        return jnp.zeros((), jnp.int32)
+
     k = cfg.heavy_capacity
     return SketchState(
-        cms_links=cms, cms_sources=cms,
-        hll_src=regs, hll_dst=regs, hll_links=regs,
+        cms_links=cms(), cms_sources=cms(),
+        hll_src=regs(), hll_dst=regs(), hll_links=regs(),
         hh_link_src=jnp.full((k,), _I32_MAX, jnp.int32),
         hh_link_dst=jnp.full((k,), _I32_MAX, jnp.int32),
         hh_link_count=jnp.zeros((k,), jnp.int32),
-        hh_link_offset=zero,
+        hh_link_offset=zero(),
         hh_src_key=jnp.full((k,), _I32_MAX, jnp.int32),
         hh_src_count=jnp.zeros((k,), jnp.int32),
-        hh_src_offset=zero,
-        n_packets=zero, n_batches=zero,
+        hh_src_offset=zero(),
+        n_packets=zero(), n_batches=zero(),
         seed=cfg.seed,
     )
 
@@ -370,13 +386,15 @@ def update_sketch(
     )
 
     def cms_fold(counts, rows, group_counts, mask):
-        # conservative update: propose est + batch_count at every row cell
+        # conservative update: propose est + batch_count at every row cell.
+        # All int32 end to end — a float32 round-trip would round the
+        # proposal down past 2^24 and underestimate.
         safe = jnp.clip(rows, 0, width - 1)
         gathered = jnp.stack(
             [counts[r][safe[r]] for r in range(depth)]
         )  # (depth, cap)
         est = jnp.min(gathered, axis=0)
-        props = jnp.where(mask, est + group_counts.astype(jnp.float32), 0.0)
+        props = jnp.where(mask, est + group_counts.astype(jnp.int32), 0)
         ids = jnp.where(mask[None, :], rows, -1)
         return cms_update(counts, ids, props, backend=backend)
 
@@ -567,24 +585,22 @@ def sketch_scalars(state: SketchState) -> Dict[str, jnp.ndarray]:
     hl_src, hl_dst, hl_est, hl_n = heavy_links(state)
     hs_key, hs_est, hs_n = heavy_talkers(state)
     link_bound = jnp.minimum(
-        hl_est.astype(jnp.float32),
-        estimate_link_packets(state, hl_src, hl_dst),
+        hl_est, estimate_link_packets(state, hl_src, hl_dst)
     )
     src_bound = jnp.minimum(
-        hs_est.astype(jnp.float32),
-        estimate_source_packets(state, hs_key),
+        hs_est, estimate_source_packets(state, hs_key)
     )
     live_l = state.hh_link_count > 0
     live_s = state.hh_src_count > 0
-    top_link = jnp.max(jnp.where(live_l, link_bound, 0.0))
-    top_src = jnp.max(jnp.where(live_s, src_bound, 0.0))
+    top_link = jnp.max(jnp.where(live_l, link_bound, 0))
+    top_src = jnp.max(jnp.where(live_s, src_bound, 0))
     return {
         "valid_packets": state.n_packets,
         "n_unique_sources": hll_cardinality(state.hll_src),
         "n_unique_destinations": hll_cardinality(state.hll_dst),
         "unique_links": hll_cardinality(state.hll_links),
-        "max_link_packets": jnp.where(hl_n > 0, top_link, 0.0),
-        "max_source_packets": jnp.where(hs_n > 0, top_src, 0.0),
+        "max_link_packets": jnp.where(hl_n > 0, top_link, 0),
+        "max_source_packets": jnp.where(hs_n > 0, top_src, 0),
     }
 
 

@@ -183,9 +183,17 @@ def botnet_beacon(
     rng = np.random.default_rng(seed)
     n_nodes = 1 << scale
     horizon = 1000 * n_packets
-    n_beacons_per_bot = max(horizon // period, 2)
+    # the returned table holds exactly n_packets rows (the size contract
+    # shared with synthetic_packets): the beacon schedule is truncated
+    # per bot when a small period would overflow it, never the reverse
+    if n_packets // n_bots < 2:
+        raise ValueError(
+            f"n_packets={n_packets} cannot hold the 2-beacon minimum for "
+            f"each of n_bots={n_bots} bots; raise n_packets or lower n_bots"
+        )
+    n_beacons_per_bot = min(max(horizon // period, 2), n_packets // n_bots)
     n_beacon = n_bots * n_beacons_per_bot
-    n_bg = max(n_packets - n_beacon, 0)
+    n_bg = n_packets - n_beacon
 
     c2 = int(rng.integers(0, n_nodes))
     bots = rng.choice(n_nodes, size=n_bots, replace=False).astype(np.uint32)

@@ -92,8 +92,13 @@ def ref_cms_update(
     proposals[i])`` — every depth row scatter-maxes the *same* proposal
     vector through its own hashed columns; cells nothing maps to keep their
     running value.  Out-of-range ids (incl. -1 = masked) are dropped.
+    Works in ``counts.dtype`` (float32 or int32 — the sketch tier stores
+    int32 so counts stay exact past 2^24).
     """
     depth, width = counts.shape
+    dtype = counts.dtype
+    sentinel = (jnp.iinfo(dtype).min if jnp.issubdtype(dtype, jnp.integer)
+                else -jnp.inf)
     ids = col_ids.astype(jnp.int32)
     ok = (ids >= 0) & (ids < width)
     fused = jnp.where(
@@ -102,14 +107,14 @@ def ref_cms_update(
         depth * width,
     )
     props = jnp.broadcast_to(
-        proposals.astype(jnp.float32)[None, :], ids.shape
+        proposals.astype(dtype)[None, :], ids.shape
     )
     upd = jax.ops.segment_max(
-        jnp.where(ok, props, -jnp.inf).reshape(-1),
+        jnp.where(ok, props, dtype.type(sentinel)).reshape(-1),
         fused.reshape(-1),
         num_segments=depth * width + 1,
     )[: depth * width].reshape(depth, width)
-    return jnp.maximum(counts.astype(jnp.float32), upd)
+    return jnp.maximum(counts, upd)
 
 
 def ref_hll_update(

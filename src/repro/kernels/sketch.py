@@ -47,20 +47,23 @@ DEFAULT_BLOCK_WIDTH = 512
 _NEG_INF = float("-inf")
 
 
-def _cms_kernel(ids_ref, prop_ref, init_ref, out_ref, *, block_width: int):
+def _cms_kernel(ids_ref, prop_ref, init_ref, out_ref, *, block_width: int,
+                sentinel):
     k = pl.program_id(2)  # proposal-block index (inner, accumulating)
     i = pl.program_id(1)  # width-tile index
     ids = ids_ref[...]  # (1, Bn) int32 — this depth row's hashed columns
-    prop = prop_ref[...].astype(jnp.float32)  # (1, Bn) — shared across rows
+    prop = prop_ref[...]  # (1, Bn) — shared across rows
     base = i * block_width
     cols = base + jax.lax.broadcasted_iota(jnp.int32, (1, block_width), 1)
     sel = ids.T == cols  # (Bn, Wt)
-    cand = jnp.where(sel, jnp.broadcast_to(prop.T, sel.shape), _NEG_INF)
+    cand = jnp.where(
+        sel, jnp.broadcast_to(prop.T, sel.shape), prop.dtype.type(sentinel)
+    )
     partial = jnp.max(cand, axis=0, keepdims=True)  # (1, Wt)
 
     @pl.when(k == 0)
     def _init():
-        out_ref[...] = init_ref[...].astype(jnp.float32)
+        out_ref[...] = init_ref[...]
 
     out_ref[...] = jnp.maximum(out_ref[...], partial)
 
@@ -78,33 +81,41 @@ def cms_update_pallas(
     and the scatter-max of ``proposals`` through every hash row.
 
     Args:
-      counts: ``(depth, width)`` float32 running sketch counts.
+      counts: ``(depth, width)`` running sketch counts — float32 or int32
+        (the sketch tier stores int32 so counts stay exact past 2^24;
+        proposals are cast to the same dtype).
       col_ids: ``(depth, n)`` int32 hashed column per (row, proposal);
         out-of-range ids (including -1 = masked proposal) are dropped.
       proposals: ``(n,)`` proposed new cell values (``est + batch_count``
         under the conservative-update rule) — shared by all depth rows.
 
-    Returns ``(depth, width)`` float32; cells no proposal maps to keep
-    their running value (``init`` semantics, not the monoid identity).
+    Returns ``(depth, width)`` in ``counts.dtype``; cells no proposal maps
+    to keep their running value (``init`` semantics, not the monoid
+    identity).
     """
     depth, width = counts.shape
+    dtype = counts.dtype
+    sentinel = (jnp.iinfo(dtype).min if jnp.issubdtype(dtype, jnp.integer)
+                else _NEG_INF)
     n = col_ids.shape[1]
     if n == 0:
         # zero proposal blocks would skip the kernel body (and its output
         # tile init) entirely — the fold of nothing is the running counts
-        return counts.astype(jnp.float32)
+        return counts
     n_pad = -n % block_props
     w_pad = -width % block_width
     ids_p = jnp.pad(
         col_ids.astype(jnp.int32), ((0, 0), (0, n_pad)), constant_values=-1
     )
-    prop_p = jnp.pad(proposals.astype(jnp.float32), (0, n_pad))[None, :]
-    init_p = jnp.pad(counts.astype(jnp.float32), ((0, 0), (0, w_pad)))
+    prop_p = jnp.pad(proposals.astype(dtype), (0, n_pad))[None, :]
+    init_p = jnp.pad(counts, ((0, 0), (0, w_pad)))
     width_padded = width + w_pad
 
     grid = (depth, width_padded // block_width, ids_p.shape[1] // block_props)
     out = pl.pallas_call(
-        functools.partial(_cms_kernel, block_width=block_width),
+        functools.partial(
+            _cms_kernel, block_width=block_width, sentinel=sentinel
+        ),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, block_props), lambda d, i, k: (d, k)),
@@ -112,7 +123,7 @@ def cms_update_pallas(
             pl.BlockSpec((1, block_width), lambda d, i, k: (d, i)),
         ],
         out_specs=pl.BlockSpec((1, block_width), lambda d, i, k: (d, i)),
-        out_shape=jax.ShapeDtypeStruct((depth, width_padded), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((depth, width_padded), dtype),
         interpret=interpret,
     )(ids_p, prop_p, init_p)
     return out[:, :width]

@@ -457,24 +457,29 @@ class StreamSnapshot:
 
     ``results`` is the exact tier's answer (None when ``tier="sketch"``);
     ``sketch`` the approximate tier's (None when ``tier="exact"``).
+    ``n_links``/``n_ips``/``overflow`` are exact-tier facts and are None
+    when that tier is disabled — a sketch-only snapshot must not dress
+    the never-updated init state up as exact zeros.
     """
 
     results: Optional[ChallengeResults]
     n_packets: int
     n_batches: int
-    n_links: int
-    n_ips: int
-    overflow: int           # > 0 => exact results unreliable (never
+    n_links: Optional[int]  # None when the exact tier is disabled
+    n_ips: Optional[int]    # None when the exact tier is disabled
+    overflow: Optional[int] # > 0 => exact results unreliable (never
                             # silent): dropped links undercount, dropped
-                            # dictionary entries alias ids — StreamConfig
+                            # dictionary entries alias ids — StreamConfig.
+                            # None when the exact tier is disabled.
     sketch: Optional[SketchSnapshot] = None
 
     @property
     def reliable(self) -> bool:
-        """True iff the exact results can be trusted: nothing overflowed.
-        The sketch tier is outside this flag — it cannot overflow; its
-        answers are instead bounded by ``sketch.bounds``."""
-        return self.overflow == 0
+        """True iff nothing overflowed: the exact tier's counter is zero,
+        or the exact tier is off entirely (``overflow is None`` — the
+        sketch tier cannot overflow; its answers are instead bounded by
+        ``sketch.bounds``)."""
+        return self.overflow is None or self.overflow == 0
 
 
 # ---------------------------------------------------------------------------
@@ -626,17 +631,18 @@ class StreamEngine:
         sketch = None
         if self._sketch_state is not None:
             sketch = snapshot_sketch(self._sketch_state, k=self.cfg.top_k)
-        n_packets = int(state.n_packets) if self.cfg.exact_enabled \
+        exact = self.cfg.exact_enabled
+        n_packets = int(state.n_packets) if exact \
             else int(self._sketch_state.n_packets)
-        n_batches = int(state.n_batches) if self.cfg.exact_enabled \
+        n_batches = int(state.n_batches) if exact \
             else int(self._sketch_state.n_batches)
         return StreamSnapshot(
             results=results,
             n_packets=n_packets,
             n_batches=n_batches,
-            n_links=int(state.n_links),
-            n_ips=int(state.n_ips),
-            overflow=int(state.overflow),
+            n_links=int(state.n_links) if exact else None,
+            n_ips=int(state.n_ips) if exact else None,
+            overflow=int(state.overflow) if exact else None,
             sketch=sketch,
         )
 

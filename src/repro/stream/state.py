@@ -138,15 +138,22 @@ def empty_links_csr(link_capacity: int) -> CsrMatrix:
 def init_state(
     link_capacity: int, ip_capacity: int, n_windows: int, ip_bins: int
 ) -> StreamState:
-    """The empty (identity) state: ``merge(init, s) == s`` for any ``s``."""
-    zero = jnp.zeros((), jnp.int32)
+    """The empty (identity) state: ``merge(init, s) == s`` for any ``s``.
+
+    Every leaf is a distinct allocation — the engine donates the state to
+    the jitted update off-CPU, and XLA rejects donating one buffer twice
+    (aliased scalar counters would crash the first ingest on TPU/GPU).
+    """
+    def zero():
+        return jnp.zeros((), jnp.int32)
+
     return StreamState(
         ip_values=jnp.full((ip_capacity,), _I32_MAX, jnp.int32),
         ip_ids=jnp.zeros((ip_capacity,), jnp.int32),
-        n_ips=zero,
+        n_ips=zero(),
         links=empty_links_csr(link_capacity),
         activity=jnp.zeros((n_windows, ip_bins), jnp.float32),
-        n_packets=zero,
-        n_batches=zero,
-        overflow=zero,
+        n_packets=zero(),
+        n_batches=zero(),
+        overflow=zero(),
     )

@@ -156,22 +156,42 @@ def test_flash_attention_grad_matches_ref():
 
 # ------------------------------------------------------------- sketch kernels
 
+@pytest.mark.parametrize("dtype", [np.float32, np.int32])
 @pytest.mark.parametrize("n", [1, 100, 1024, 5000])
 @pytest.mark.parametrize("depth,width", [(1, 64), (4, 512), (3, 1000)])
-def test_cms_update_sweep(n, depth, width):
-    counts = RNG.integers(0, 50, (depth, width)).astype(np.float32)
+def test_cms_update_sweep(n, depth, width, dtype):
+    counts = RNG.integers(0, 50, (depth, width)).astype(dtype)
     # incl. out-of-range ids and -1 = masked proposal, per the contract
     ids = RNG.integers(-2, width + 2, (depth, n)).astype(np.int32)
-    props = RNG.integers(1, 100, n).astype(np.float32)
+    props = RNG.integers(1, 100, n).astype(dtype)
     got = cms_update_pallas(
         jnp.asarray(counts), jnp.asarray(ids), jnp.asarray(props),
         interpret=True,
     )
     want = ref_cms_update(jnp.asarray(counts), jnp.asarray(ids),
                           jnp.asarray(props))
+    assert np.asarray(got).dtype == dtype  # counts dtype is preserved
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
     # cells never fall below their running value (init semantics)
     assert (np.asarray(got) >= counts).all()
+
+
+def test_cms_update_int32_exact_past_float32_mantissa():
+    """int32 counts must stay exact where float32 cells would round:
+    2^24 + 1 is not representable in float32, and the sketch tier's
+    never-underestimate guarantee depends on it surviving verbatim."""
+    big = np.int32(1 << 24)
+    counts = np.full((2, 64), big, np.int32)
+    ids = np.zeros((2, 1), np.int32)
+    props = np.array([big + 1], np.int32)
+    for out in (
+        cms_update_pallas(jnp.asarray(counts), jnp.asarray(ids),
+                          jnp.asarray(props), interpret=True),
+        ref_cms_update(jnp.asarray(counts), jnp.asarray(ids),
+                       jnp.asarray(props)),
+    ):
+        assert int(np.asarray(out)[0, 0]) == int(big) + 1
+        assert int(np.asarray(out)[1, 0]) == int(big) + 1
 
 
 def test_cms_update_empty_proposals_is_identity():

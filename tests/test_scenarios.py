@@ -145,6 +145,23 @@ def test_beacon_inter_arrivals_are_periodic():
     assert gaps.std() / period < 0.1  # metronome, not Poisson
 
 
+def test_beacon_small_period_keeps_row_count_contract():
+    """A small period must not let the beacon schedule grow the table past
+    n_packets (the size contract every generator shares): beacons truncate
+    per bot, background fills the remainder, total stays exact."""
+    n = 1024
+    cols = botnet_beacon(n, scale=SCALE, seed=7, n_bots=4, period=100)
+    assert all(len(v) == n for v in cols.values())
+    # the beacon foreground really did saturate its per-bot allowance
+    dst, counts = np.unique(cols["dst"], return_counts=True)
+    assert counts.max() >= 4 * (n // 4) * 0.9  # c2 absorbs ~every beacon
+
+
+def test_beacon_rejects_more_bots_than_packets_can_carry():
+    with pytest.raises(ValueError, match="2-beacon minimum"):
+        botnet_beacon(16, scale=SCALE, n_bots=16)
+
+
 def test_diurnal_window_mass_swings():
     cols = diurnal(N, scale=SCALE, seed=6, n_cycles=2.0, depth=0.8)
     ts = cols["ts"].astype(np.float64)

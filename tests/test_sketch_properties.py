@@ -14,10 +14,10 @@ extra is installed, deterministic seeded examples otherwise):
     > N/(capacity+1) is present), per-key ``count <= true <= count +
     offset``, and ``offset <= N/(capacity+1)``.
   * Merges: CMS and HLL are associative AND commutative bit-identically
-    (integer-valued fp32 counts below 2^24 add exactly); the heavy-hitter
-    fold is commutative bit-identically and associative up to its bound —
-    mirroring the 3-state merge properties of tests/test_sparse.py /
-    tests/test_stream.py.
+    (int32 CMS cells add exactly up to 2^31-1 — no float32 mantissa
+    cliff); the heavy-hitter fold is commutative bit-identically and
+    associative up to its bound — mirroring the 3-state merge properties
+    of tests/test_sparse.py / tests/test_stream.py.
 """
 import collections
 
@@ -123,6 +123,42 @@ def test_cms_conservative_update_tighter_within_batch_duplicates():
     assert est == 20.0
 
 
+def test_cms_counts_exact_past_float32_mantissa():
+    """int32 cells keep counts exact where float32 would round: drive one
+    key past 2^24 via the weights path and check the +1 survives (the
+    never-underestimate guarantee would silently break otherwise)."""
+    state = init_sketch(CFG)
+    src = np.zeros(CAP, np.int32)
+    dst = np.zeros(CAP, np.int32)
+    src[0], dst[0] = 7, 9
+    big = 1 << 24
+    for w in (big, 1):  # est = 2^24, then propose 2^24 + 1
+        weights = np.zeros(CAP, np.int32)
+        weights[0] = w
+        state = update_sketch(
+            state, jnp.asarray(src), jnp.asarray(dst), 1,
+            weights=jnp.asarray(weights), backend="xla",
+        )
+    assert state.cms_links.dtype == jnp.int32
+    est = int(estimate_link_packets(
+        state, jnp.asarray([7], jnp.int32), jnp.asarray([9], jnp.int32))[0])
+    assert est == big + 1  # float32 cells would report 2^24 exactly
+
+
+def test_init_sketch_leaves_never_alias():
+    """StreamEngine donates the sketch state off-CPU; donating two pytree
+    leaves backed by one buffer crashes XLA ('Attempt to donate the same
+    buffer twice'), so every init leaf must be a distinct allocation."""
+    import jax
+
+    leaves = jax.tree_util.tree_leaves(init_sketch(CFG))
+    try:
+        keys = [leaf.unsafe_buffer_pointer() for leaf in leaves]
+    except (AttributeError, NotImplementedError):
+        keys = [id(leaf) for leaf in leaves]
+    assert len(set(keys)) == len(leaves)
+
+
 # ----------------------------------------------------------- HyperLogLog
 
 @given(st.integers(0, 10_000), st.integers(100, 3000))
@@ -222,8 +258,8 @@ def test_merge_commutative_bit_identical(seed):
 @given(st.integers(0, 10_000))
 @settings(max_examples=8, deadline=None)
 def test_merge_associative_bit_identical_cms_hll(seed):
-    """(a⊕b)⊕c == a⊕(b⊕c) bit-identically for CMS (integer-valued fp32
-    adds exactly) and HLL (max is associative); the heavy-hitter tables are
+    """(a⊕b)⊕c == a⊕(b⊕c) bit-identically for CMS (int32 cells add
+    exactly) and HLL (max is associative); the heavy-hitter tables are
     associative only up to their bound (the decrement schedule depends on
     grouping) and are covered by the guarantee-level test below."""
     parts = _parts(seed)

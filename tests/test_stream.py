@@ -397,6 +397,20 @@ def test_stream_cli_smoke(tmp_path, capsys):
     assert "all scalar queries match the NumPy oracle" in out
 
 
+def test_init_state_leaves_never_alias():
+    """The engine donates the state to the jitted update off-CPU; two
+    pytree leaves sharing one buffer would crash the first ingest with
+    XLA's 'Attempt to donate the same buffer twice'."""
+    from repro.stream.state import init_state
+
+    leaves = jax.tree_util.tree_leaves(init_state(16, 32, 2, 8))
+    try:
+        keys = [leaf.unsafe_buffer_pointer() for leaf in leaves]
+    except (AttributeError, NotImplementedError):
+        keys = [id(leaf) for leaf in leaves]
+    assert len(set(keys)) == len(leaves)
+
+
 # --------------------------------------------------- sketch tier vs exact
 
 def _ddos_capture(n=1 << 12, scale=10, seed=0, n_windows=3):
@@ -474,9 +488,14 @@ def test_stream_tier_sketch_only_never_overflows():
                   tier="sketch", sketch=SketchConfig(seed=0))
     snap = eng.snapshot()
     assert snap.results is None       # no exact tier ran
-    assert snap.overflow == 0 and snap.reliable
+    # exact-tier facts are None, not zeros read off the never-updated init
+    # state — a sketch-only snapshot must not impersonate the exact tier
+    assert snap.n_links is None and snap.n_ips is None
+    assert snap.overflow is None and snap.reliable
     assert snap.sketch is not None
+    assert snap.sketch.overflow == 0 and snap.sketch.reliable
     assert snap.sketch.n_packets == len(src)
+    assert snap.n_packets == len(src)  # counters come from the sketch tier
 
 
 def test_detection_queries_agree_across_tiers():
