@@ -10,6 +10,8 @@ Emits ``name,us_per_call,derived`` CSV rows:
   distributed/*  beyond-paper     (shard_map pipeline at 8 shards)
   endtoend/*     paper pipeline   (per-phase + fused full-workload throughput)
   sketch/*       beyond-paper     (bounded-memory tier: wall + error-vs-bound)
+  serve/*        beyond-paper     (fault-tolerant service: checkpoint tax +
+                                   crash recovery, gated on bit-identity)
 
 The query section always writes its rows machine-readably (steady-state
 us/call + compiled-HLO sort counts per op) to ``--bench-json``
@@ -22,9 +24,13 @@ The algorithms section writes ``--algorithms-json`` (default
 ``BENCH_algorithms.json``): per-algorithm walls with oracle-parity flags
 plus the analyze(algorithms=True) HLO sort count (DESIGN.md §2.5).
 
+The serve section writes ``--serve-json`` (default ``BENCH_serve.json``):
+checkpoint/restore/replay walls with the recovered-vs-uninterrupted
+bit-identity flag (DESIGN.md §2.7).
+
 ``python -m benchmarks.run [--quick] [--n N] [--only PREFIX] [--ab]
 [--bench-json PATH] [--graphblas-json PATH] [--algorithms-json PATH]
-[--sketches-json PATH]``
+[--sketches-json PATH] [--serve-json PATH]``
 """
 from __future__ import annotations
 
@@ -51,12 +57,15 @@ def main() -> None:
     ap.add_argument("--sketches-json", default="BENCH_sketches.json",
                     help="machine-readable sketch error-vs-bound rows "
                          "(empty string disables)")
+    ap.add_argument("--serve-json", default="BENCH_serve.json",
+                    help="machine-readable serve recovery-overhead rows "
+                         "(empty string disables)")
     args = ap.parse_args()
     n = (1 << 17) if args.quick else args.n
 
     from . import (bench_algorithms, bench_anonymize, bench_distributed,
                    bench_endtoend, bench_graphblas, bench_io, bench_kernels,
-                   bench_queries, bench_sketches)
+                   bench_queries, bench_serve, bench_sketches)
 
     sections = [
         ("io", lambda: bench_io.run(n=n)),
@@ -72,6 +81,8 @@ def main() -> None:
         ("endtoend", lambda: bench_endtoend.run(n=n)),
         ("sketch", lambda: bench_sketches.run(
             n=n, json_path=args.sketches_json or None)),
+        ("serve", lambda: bench_serve.run(
+            n=n, json_path=args.serve_json or None)),
     ]
     print("name,us_per_call,derived")
     failed = 0

@@ -31,25 +31,57 @@ class Prefetcher:
     steps after its input pipeline had already died.  ``_err`` is published
     before the ``_done`` sentinel is enqueued, so once the producer thread
     has failed, every subsequent ``__next__`` raises deterministically.
+
+    Teardown contract (fault paths): ``close()`` is idempotent and safe to
+    call from any state — it tells the producer to stop, drains the queue so
+    a blocked ``put`` releases, and joins the thread.  Use the context
+    manager protocol so a crash in the consumer (a supervised service loop
+    aborting mid-stream, a test timing out) can never leak the background
+    thread; before ``close()`` existed the only tool was ``join(timeout)``,
+    which on a full queue simply timed out and leaked.
     """
 
     def __init__(self, it: Iterator, depth: int = 2):
         self._q: "queue.Queue" = queue.Queue(maxsize=depth)
         self._err: Optional[BaseException] = None
         self._done = object()
+        self._stop = threading.Event()
+        self._closed = False
 
         def run():
             try:
                 for item in it:
-                    self._q.put(item)
+                    if self._stop.is_set():
+                        break
+                    # bounded-wait put so a close() can always interrupt a
+                    # producer blocked on a full queue
+                    while not self._stop.is_set():
+                        try:
+                            self._q.put(item, timeout=0.05)
+                            break
+                        except queue.Full:
+                            continue
+                    if self._stop.is_set():
+                        break
             except BaseException as e:  # surfaced on next() — see class doc
                 self._err = e
             finally:
-                if self._err is not None:
-                    # The fail-fast contract drops queued items anyway; a
-                    # blocking put here could leave this thread stuck forever
-                    # on a full queue (the failing consumer never drains it).
-                    # Discard queued items until the sentinel fits.
+                sent = False
+                # Clean exit: block (bounded) so queued batches survive —
+                # the consumer is still draining them.
+                while self._err is None and not self._stop.is_set():
+                    try:
+                        self._q.put(self._done, timeout=0.05)
+                        sent = True
+                        break
+                    except queue.Full:
+                        continue
+                if not sent:
+                    # Error or close(): the fail-fast/teardown contract
+                    # drops queued items anyway; a blocking put here could
+                    # leave this thread stuck forever on a full queue (the
+                    # failed consumer never drains it).  Discard queued
+                    # items until the sentinel fits.
                     while True:
                         try:
                             self._q.put_nowait(self._done)
@@ -59,8 +91,6 @@ class Prefetcher:
                                 self._q.get_nowait()
                             except queue.Empty:
                                 pass
-                else:
-                    self._q.put(self._done)
 
         self._t = threading.Thread(target=run, daemon=True)
         self._t.start()
@@ -69,6 +99,29 @@ class Prefetcher:
     def join(self, timeout: Optional[float] = None) -> None:
         """Wait for the producer thread to finish (tests / orderly shutdown)."""
         self._t.join(timeout)
+
+    def close(self) -> None:
+        """Stop the producer and join its thread.  Idempotent; never raises
+        the producer's pending error (teardown must always succeed)."""
+        if self._closed:
+            return
+        self._closed = True
+        self._exhausted = True
+        self._stop.set()
+        # drain so a producer blocked on put() can reach the stop check
+        while self._t.is_alive():
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                pass
+            self._t.join(0.05)
+
+    def __enter__(self) -> "Prefetcher":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
 
     def __iter__(self):
         return self

@@ -12,18 +12,48 @@ unavailable here, so ``plq`` reproduces the properties that matter:
     (and mmap-able for cached reads).
 
 Layout: ``[MAGIC u64][pages...][footer json][footer_len u64][MAGIC u64]``.
+
+Integrity (DESIGN.md §2.7): every page carries a CRC32 in the footer, so a
+torn or bit-flipped page is *detected* at read time — ``read_plq_group`` /
+``read_plq_chunks`` raise :class:`PlqCorruptionError` instead of handing
+garbage to the engine.  Files written before the checksum existed simply
+skip the check (no ``crc32`` key), so old captures stay readable.  Row
+groups are addressable by index (``read_plq_group``), which is what the
+fault-tolerant ingest path retries and the recovery watermark replays.
 """
 from __future__ import annotations
 
 import json
 import os
+import zlib
 from typing import Dict, Iterator, List, Optional, Sequence
 
 import numpy as np
 
-__all__ = ["write_plq", "read_plq", "read_plq_chunks", "plq_info"]
+__all__ = [
+    "PlqCorruptionError",
+    "write_plq",
+    "read_plq",
+    "read_plq_group",
+    "read_plq_chunks",
+    "plq_info",
+]
 
 _MAGIC = 0x504C515F52455052  # "PLQ_REPR"
+
+
+class PlqCorruptionError(ValueError):
+    """A page failed its integrity check (truncated bytes or CRC mismatch).
+
+    Carries ``group`` (row-group index) and ``column`` so the resilient
+    ingest path can quarantine and retry the exact unit that tore.
+    """
+
+    def __init__(self, msg: str, group: Optional[int] = None,
+                 column: Optional[str] = None):
+        super().__init__(msg)
+        self.group = group
+        self.column = column
 
 
 def write_plq(
@@ -49,7 +79,11 @@ def write_plq(
                 off = f.tell()
                 buf = np.ascontiguousarray(v[start:stop]).tobytes()
                 f.write(buf)
-                group["pages"][k] = {"offset": off, "nbytes": len(buf)}
+                group["pages"][k] = {
+                    "offset": off,
+                    "nbytes": len(buf),
+                    "crc32": zlib.crc32(buf) & 0xFFFFFFFF,
+                }
             footer["groups"].append(group)
         fj = json.dumps(footer).encode()
         f.write(fj)
@@ -71,6 +105,29 @@ def plq_info(path: str) -> dict:
             raise ValueError(f"{path}: truncated (bad trailing magic)")
         f.seek(-16 - flen, os.SEEK_END)
         return json.loads(f.read(flen))
+
+
+def _read_page(f, info: dict, group: dict, gi: int, name: str,
+               validate: bool) -> np.ndarray:
+    """Read one column page of one row group, integrity-checked."""
+    page = group["pages"][name]
+    f.seek(page["offset"])
+    buf = f.read(page["nbytes"])
+    if len(buf) != page["nbytes"]:
+        raise PlqCorruptionError(
+            f"row group {gi} column {name!r}: truncated page "
+            f"({len(buf)} of {page['nbytes']} bytes)",
+            group=gi, column=name,
+        )
+    if validate and "crc32" in page:
+        crc = zlib.crc32(buf) & 0xFFFFFFFF
+        if crc != page["crc32"]:
+            raise PlqCorruptionError(
+                f"row group {gi} column {name!r}: CRC32 mismatch "
+                f"(got {crc:#010x}, footer {page['crc32']:#010x})",
+                group=gi, column=name,
+            )
+    return np.frombuffer(buf, np.dtype(info["columns"][name]))
 
 
 def read_plq(
@@ -95,19 +152,45 @@ def read_plq(
     return {k: np.concatenate(v) if len(v) != 1 else v[0] for k, v in out.items()}
 
 
+def read_plq_group(
+    path: str,
+    group: int,
+    columns: Optional[Sequence[str]] = None,
+    validate: bool = True,
+    info: Optional[dict] = None,
+) -> Dict[str, np.ndarray]:
+    """Read one row group by index — the retriable/replayable ingest unit.
+
+    Raises :class:`PlqCorruptionError` on a truncated page or (when the
+    footer carries checksums) a CRC32 mismatch; raises ``IndexError`` on an
+    out-of-range group.  Pass ``info`` (a cached :func:`plq_info` result) to
+    skip re-parsing the footer on every call.
+    """
+    info = plq_info(path) if info is None else info
+    if not 0 <= group < len(info["groups"]):
+        raise IndexError(
+            f"row group {group} out of range [0, {len(info['groups'])})"
+        )
+    g = info["groups"][group]
+    names = list(columns or info["columns"])
+    with open(path, "rb") as f:
+        return {k: _read_page(f, info, g, group, k, validate) for k in names}
+
+
 def read_plq_chunks(
-    path: str, columns: Optional[Sequence[str]] = None
+    path: str,
+    columns: Optional[Sequence[str]] = None,
+    start_group: int = 0,
+    validate: bool = True,
 ) -> Iterator[Dict[str, np.ndarray]]:
-    """Stream row groups — the pipeline's prefetchable unit."""
+    """Stream row groups — the pipeline's prefetchable unit.
+
+    ``start_group`` skips already-committed groups (the recovery replay
+    path resumes the capture from its checkpoint watermark).
+    """
     info = plq_info(path)
     names = list(columns or info["columns"])
     with open(path, "rb") as f:
-        for g in info["groups"]:
-            chunk = {}
-            for k in names:
-                page = g["pages"][k]
-                f.seek(page["offset"])
-                chunk[k] = np.frombuffer(
-                    f.read(page["nbytes"]), np.dtype(info["columns"][k])
-                )
-            yield chunk
+        for gi in range(start_group, len(info["groups"])):
+            g = info["groups"][gi]
+            yield {k: _read_page(f, info, g, gi, k, validate) for k in names}

@@ -1,34 +1,62 @@
-"""Analytics serving driver — the streaming engine as a batched service.
+"""Analytics serving driver — the streaming engine as a supervised service.
 
-Built on ``repro.stream`` (DESIGN.md §6): packet micro-batches (plq row
-groups) are prefetched by a background thread, transferred host->device
-while the previous update still runs (double buffering via JAX async
-dispatch), and folded into mergeable state from which the 14 challenge
-queries are served at any point.  Batch 0 carries trace+compile and is
-excluded from the steady-state numbers (``--time-phases`` blocks per phase
-for attributable walls; the default overlapped mode is the throughput
-measurement — docs/METHODOLOGY.md).  ``--distributed`` merges the
-accumulated state through the repro.dist shard_map path over all local
-devices at query time.
+Built on ``repro.stream`` (DESIGN.md §6 + §2.7): packet micro-batches (plq
+row groups) flow through the resilient ingest path — seeded chaos
+(``--chaos`` / per-fault rates), bounded retries with exponential backoff,
+dead-letter quarantine — into the stream engine, with durable watermarked
+checkpoints (``--checkpoint-dir``) so a crash restores the newest complete
+checkpoint and replays only the uncommitted suffix, bit-identically.
+``--crash-at-batch`` arms one simulated process death (the chaos smoke's
+recovery gate); ``--verify`` re-runs the capture uninterrupted/fault-free
+and exits nonzero unless the 14-query snapshots agree exactly.  Graceful
+degradation (``--degrade-to-both`` / ``--degrade-to-sketch``) sheds the
+exact tier forward to the bounded-memory sketch tier under capacity
+pressure — recorded in the snapshot's health ledger, never silent.
+
+Batch 0 carries trace+compile and is excluded from the steady-state numbers
+(``--time-phases`` blocks per phase for attributable walls; the default
+overlapped mode is the throughput measurement — docs/METHODOLOGY.md).
+``--distributed`` merges the accumulated state through the repro.dist
+shard_map path over all local devices at query time.
 
     PYTHONPATH=src python -m repro.launch.serve --n-packets 1000000 \
         --batch-size 65536 --snapshot-every 4
+
+    # chaos smoke: faults + one crash/restore, gated on exactness
+    PYTHONPATH=src python -m repro.launch.serve --scale 10 --n-packets 4096 \
+        --batch-size 512 --chaos --crash-at-batch 4 \
+        --checkpoint-dir /tmp/ckpt --verify
 """
 import argparse
+import dataclasses
 import os
 import sys
 import tempfile
 import time
 
 
+def _health_line(h) -> str:
+    return (f"dup={h.duplicates_dropped} reord={h.reordered_buffered} "
+            f"quar={h.quarantined} retries={h.io_retries} "
+            f"spikes={h.latency_spikes} lost={h.lost_batches} "
+            f"replayed={h.batches_replayed} crashes={h.crashes_recovered} "
+            f"ckpts={h.checkpoints_committed}"
+            + (f" degraded->{h.degraded_to}@{h.degraded_at_batch}"
+               if h.degraded_to else ""))
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.launch.serve",
-        description="Streaming analytics service over packet micro-batches",
+        description="Fault-tolerant streaming analytics service over "
+                    "packet micro-batches",
     )
     ap.add_argument("--n-packets", type=int, default=1 << 20)
     ap.add_argument("--scale", type=int, default=18,
                     help="RMAT vertex scale of the synthetic capture")
+    ap.add_argument("--scenario", default="rmat",
+                    help="traffic generator (rmat or an adversarial "
+                         "scenario from repro.data.scenarios)")
     ap.add_argument("--batch-size", type=int, default=1 << 16,
                     help="micro-batch rows (= plq row-group size)")
     ap.add_argument("--windows", type=int, default=8)
@@ -40,6 +68,9 @@ def main(argv=None) -> int:
     ap.add_argument("--ip-capacity", type=int, default=None,
                     help="anonymization dictionary budget "
                          "(default 2*link_capacity: always exact)")
+    ap.add_argument("--tier", default="exact",
+                    choices=["exact", "sketch", "both"],
+                    help="analytics substrate(s) each batch folds into")
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "xla", "pallas", "interpret"])
     ap.add_argument("--seed", type=int, default=0)
@@ -50,11 +81,53 @@ def main(argv=None) -> int:
     ap.add_argument("--distributed", action="store_true",
                     help="query-time scalar merge via repro.dist shard_map")
     ap.add_argument("--workdir", default=None)
+
+    g = ap.add_argument_group("durability (stream/recovery.py)")
+    g.add_argument("--checkpoint-dir", default=None,
+                   help="watermarked atomic checkpoints; restart restores "
+                        "the newest complete one and replays the suffix")
+    g.add_argument("--checkpoint-every", type=int, default=1, metavar="K",
+                   help="commit every K folded batches (default 1)")
+    g.add_argument("--keep", type=int, default=3,
+                   help="checkpoint retention (older steps are GCed)")
+    g.add_argument("--max-restarts", type=int, default=3)
+
+    g = ap.add_argument_group("chaos injection (data/faults.py)")
+    g.add_argument("--chaos", action="store_true",
+                   help="enable the default fault cocktail (transient IO + "
+                        "torn reads + duplicates + reorders)")
+    g.add_argument("--fault-seed", type=int, default=0)
+    g.add_argument("--transient-io-rate", type=float, default=None)
+    g.add_argument("--corrupt-rate", type=float, default=None)
+    g.add_argument("--duplicate-rate", type=float, default=None)
+    g.add_argument("--reorder-rate", type=float, default=None)
+    g.add_argument("--latency-rate", type=float, default=None)
+    g.add_argument("--latency-s", type=float, default=0.002)
+    g.add_argument("--crash-at-batch", type=int, default=None,
+                   help="arm one simulated process death after folding "
+                        "this batch (before its checkpoint commits)")
+    g.add_argument("--quarantine-dir", default=None,
+                   help="persist dead-lettered batch copies + jsonl index")
+
+    g = ap.add_argument_group("graceful degradation")
+    g.add_argument("--degrade-to-both", type=float, default=None,
+                   metavar="P", help="capacity pressure that brings the "
+                                     "sketch tier up beside the exact one")
+    g.add_argument("--degrade-to-sketch", type=float, default=None,
+                   metavar="P", help="pressure that freezes the exact tier")
+
+    ap.add_argument("--verify", action="store_true",
+                    help="re-run uninterrupted/fault-free and require the "
+                         "14-query snapshots to match exactly (chaos gate)")
     args = ap.parse_args(argv)
 
     from ..challenge.pipeline import window_column
+    from ..data.faults import FaultConfig
     from ..data.plq import read_plq
-    from ..stream.engine import StreamConfig, StreamEngine, steady_state, stream_plq
+    from ..stream.engine import (
+        StreamConfig, StreamEngine, steady_state, stream_plq,
+    )
+    from ..stream.recovery import DegradePolicy, run_service
     from ..stream.run import format_timings, prepare_capture
 
     workdir = args.workdir or tempfile.mkdtemp(prefix="netsense_serve_")
@@ -64,7 +137,8 @@ def main(argv=None) -> int:
 
     # ---- ingest setup (paper Table II protocol: generate once, reuse) ----
     t0 = time.perf_counter()
-    path = prepare_capture(workdir, n, args.scale, args.seed, batch)
+    path = prepare_capture(workdir, n, args.scale, args.seed, batch,
+                           scenario=args.scenario)
     t_cap = time.perf_counter() - t0
     t0 = time.perf_counter()
     ts = read_plq(path, ["ts"])["ts"]
@@ -82,49 +156,138 @@ def main(argv=None) -> int:
             else args.link_capacity,
             ip_capacity=args.ip_capacity,
             n_windows=args.windows, ip_bins=args.ip_bins, top_k=args.top_k,
-            backend=args.backend,
+            backend=args.backend, tier=args.tier,
         )
     except ValueError as e:
         ap.error(str(e))
-    engine = StreamEngine(cfg)
+
+    # ---- fault + degradation policy ----
+    rates = {
+        "transient_io_rate": args.transient_io_rate,
+        "corrupt_rate": args.corrupt_rate,
+        "duplicate_rate": args.duplicate_rate,
+        "reorder_rate": args.reorder_rate,
+        "latency_rate": args.latency_rate,
+    }
+    if args.chaos:
+        defaults = {"transient_io_rate": 0.25, "corrupt_rate": 0.25,
+                    "duplicate_rate": 0.2, "reorder_rate": 0.2,
+                    "latency_rate": 0.0}
+        rates = {k: defaults[k] if v is None else v for k, v in rates.items()}
+    else:
+        rates = {k: 0.0 if v is None else v for k, v in rates.items()}
+    faults = None
+    if any(v > 0 for v in rates.values()) or args.crash_at_batch is not None:
+        faults = FaultConfig(seed=args.fault_seed, latency_s=args.latency_s,
+                             crash_at_batch=args.crash_at_batch, **rates)
+    degrade = None
+    if args.degrade_to_both is not None or args.degrade_to_sketch is not None:
+        both = args.degrade_to_both
+        sk = args.degrade_to_sketch
+        degrade = DegradePolicy(to_both=both if both is not None else
+                                (sk if sk is not None else 0.85),
+                                to_sketch=sk if sk is not None else 1.0)
 
     def on_batch(i, eng):
         if args.snapshot_every and (i + 1) % args.snapshot_every == 0:
             t0 = time.perf_counter()
             snap = eng.snapshot()
             dt = time.perf_counter() - t0
-            s = snap.results.scalars
-            print(f"[serve] snapshot@batch {i}: packets={snap.n_packets:,} "
-                  f"links={int(s.unique_links):,} ips={snap.n_ips:,} "
-                  f"({dt:.3f}s)", flush=True)
+            if snap.results is not None:
+                s = snap.results.scalars
+                print(f"[serve] snapshot@batch {i}: "
+                      f"packets={snap.n_packets:,} "
+                      f"links={int(s.unique_links):,} ips={snap.n_ips:,} "
+                      f"tier={snap.tier} ({dt:.3f}s)", flush=True)
+            else:
+                sk = snap.sketch
+                print(f"[serve] snapshot@batch {i}: "
+                      f"packets={snap.n_packets:,} "
+                      f"links~{int(sk.unique_links):,} tier={snap.tier} "
+                      f"({dt:.3f}s)", flush=True)
 
-    # ---- stream phase (double-buffered service loop) ----
+    # ---- supervised stream phase ----
     t0 = time.perf_counter()
-    timings = stream_plq(engine, path, win_full,
-                         time_phases=args.time_phases, on_batch=on_batch)
+    report = run_service(
+        cfg, path, win_full,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every,
+        keep=args.keep,
+        faults=faults,
+        degrade=degrade,
+        quarantine_dir=args.quarantine_dir,
+        max_restarts=args.max_restarts,
+        on_batch=on_batch,
+    )
     wall = time.perf_counter() - t0
+    timings = report.timings
     print("\n" + format_timings(timings), flush=True)
     ss = steady_state(timings)
     print(f"[serve] end-to-end stream wall {wall:.3f}s "
           f"({n / wall:,.0f} packets/s incl. compile; steady state "
           f"{ss['packets_per_s']:,.0f} packets/s)", flush=True)
+    if report.restarts or report.checkpoint_walls:
+        cw = sum(report.checkpoint_walls)
+        rw = sum(report.restore_walls)
+        print(f"[serve] durability: {len(report.checkpoint_walls)} commits "
+              f"({cw:.3f}s), {report.restarts} restarts "
+              f"({rw:.3f}s restore, {report.replay_wall_s:.3f}s replay), "
+              f"watermark {report.watermark}/{report.n_groups}", flush=True)
+    print(f"[serve] health: {_health_line(report.health)}", flush=True)
 
     # ---- query phase ----
     t0 = time.perf_counter()
-    snap = engine.snapshot(distributed=args.distributed)
+    snap = report.snapshot(distributed=args.distributed)
     t_q = time.perf_counter() - t0
-    d = {k: int(v) for k, v in sorted(snap.results.scalars.as_dict().items())}
-    print(f"[serve] results ({'distributed' if args.distributed else 'local'}"
-          f" scalar suite, {t_q:.3f}s):", d, flush=True)
-    print(f"[serve] state: {snap.n_links:,} links, {snap.n_ips:,} dictionary "
-          f"entries, overflow={snap.overflow}", flush=True)
+    if snap.results is not None:
+        d = {k: int(v)
+             for k, v in sorted(snap.results.scalars.as_dict().items())}
+        print(f"[serve] results "
+              f"({'distributed' if args.distributed else 'local'} scalar "
+              f"suite, {t_q:.3f}s):", d, flush=True)
+        print(f"[serve] state: {snap.n_links:,} links, {snap.n_ips:,} "
+              f"dictionary entries, overflow={snap.overflow}, "
+              f"tier={snap.tier}", flush=True)
+    else:
+        print(f"[serve] results (sketch tier, {t_q:.3f}s): "
+              f"packets={snap.sketch.n_packets:,} "
+              f"links~{int(snap.sketch.unique_links):,}", flush=True)
+
+    rc = 0
     if snap.overflow:
         print(f"[serve] WARNING: state overflow={snap.overflow} — results "
               "are unreliable (dropped links undercount, dropped dictionary "
-              "entries alias ids); raise --link-capacity/--ip-capacity",
+              "entries alias ids); raise --link-capacity/--ip-capacity "
+              "or set a --degrade-to-sketch threshold",
               file=sys.stderr)
-        return 1
-    return 0
+        rc = 1
+    if snap.health is not None and snap.health.lost_batches:
+        print(f"[serve] WARNING: {snap.health.lost_batches} batches lost "
+              "past the retry budget (quarantined, counted, excluded) — "
+              "results are not exact", file=sys.stderr)
+        rc = 1
+
+    # ---- verification gate (chaos smoke) ----
+    if args.verify:
+        if not cfg.exact_enabled:
+            print("[serve] --verify requires an exact tier", file=sys.stderr)
+            return 2
+        t0 = time.perf_counter()
+        oracle = StreamEngine(dataclasses.replace(cfg, tier="exact"))
+        stream_plq(oracle, path, win_full)
+        want = oracle.snapshot().results.scalars.as_dict()
+        got = snap.results.scalars.as_dict()
+        bad = {k: (int(got[k]), int(v)) for k, v in want.items()
+               if int(got[k]) != int(v)}
+        dt = time.perf_counter() - t0
+        if bad:
+            print(f"[serve] VERIFY FAILED ({dt:.3f}s): recovered snapshot "
+                  f"diverges from uninterrupted run: {bad}", file=sys.stderr)
+            return 1
+        print(f"[serve] verify OK ({dt:.3f}s): all "
+              f"{len(want)} scalar queries bit-identical to the "
+              "uninterrupted fault-free run", flush=True)
+    return rc
 
 
 if __name__ == "__main__":

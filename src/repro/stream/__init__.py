@@ -22,10 +22,21 @@ from .engine import (
     update_state_naive,
 )
 from .algorithms import snapshot_algorithms
+from .recovery import (
+    DegradePolicy,
+    ServiceReport,
+    SimulatedCrash,
+    StreamCheckpointer,
+    run_service,
+)
 from .state import StreamState, init_state
 
 __all__ = [
+    "DegradePolicy",
+    "ServiceReport",
+    "SimulatedCrash",
     "StreamBatchTimings",
+    "StreamCheckpointer",
     "StreamConfig",
     "StreamEngine",
     "StreamSnapshot",
@@ -35,6 +46,7 @@ __all__ = [
     "link_table",
     "snapshot_algorithms",
     "merge_states",
+    "run_service",
     "steady_state",
     "stream_plq",
     "update_state",

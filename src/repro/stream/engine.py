@@ -52,6 +52,7 @@ from ..core.sketch import (
 )
 from ..core.sparse import ewise_union, from_coo
 from ..core.table import Table
+from ..data.faults import IngestHealth
 from ..data.pipeline import Prefetcher
 from ..data.plq import read_plq_chunks
 from ..kernels.ops import windowed_histogram
@@ -70,6 +71,8 @@ __all__ = [
     "stream_plq",
     "steady_state",
 ]
+
+_TIER_ORDER = {"exact": 0, "both": 1, "sketch": 2}
 
 _I32_MAX = jnp.iinfo(jnp.int32).max
 
@@ -460,6 +463,14 @@ class StreamSnapshot:
     ``n_links``/``n_ips``/``overflow`` are exact-tier facts and are None
     when that tier is disabled — a sketch-only snapshot must not dress
     the never-updated init state up as exact zeros.
+
+    ``tier`` is the tier *active at snapshot time* — under the
+    graceful-degradation policy (DESIGN.md §2.7) it can differ from the
+    configured tier, and ``health.degraded_to``/``degraded_at_batch``
+    record where the switch happened (never silent).  ``health`` is the
+    ingest-path ledger (:class:`repro.data.faults.IngestHealth`):
+    quarantined copies, retries, duplicates dropped, batches replayed,
+    crashes recovered, lost batches.
     """
 
     results: Optional[ChallengeResults]
@@ -472,14 +483,18 @@ class StreamSnapshot:
                             # dictionary entries alias ids — StreamConfig.
                             # None when the exact tier is disabled.
     sketch: Optional[SketchSnapshot] = None
+    tier: str = "exact"     # the tier active when this snapshot was taken
+    health: Optional[IngestHealth] = None
 
     @property
     def reliable(self) -> bool:
-        """True iff nothing overflowed: the exact tier's counter is zero,
-        or the exact tier is off entirely (``overflow is None`` — the
-        sketch tier cannot overflow; its answers are instead bounded by
-        ``sketch.bounds``)."""
-        return self.overflow is None or self.overflow == 0
+        """True iff nothing was lost: the exact tier's overflow counter is
+        zero (or that tier is off entirely — the sketch tier cannot
+        overflow; its answers are instead bounded by ``sketch.bounds``)
+        AND the ingest path dropped no batch past its retry budget."""
+        overflowed = self.overflow is not None and self.overflow != 0
+        lost = self.health is not None and self.health.lost_batches > 0
+        return not overflowed and not lost
 
 
 # ---------------------------------------------------------------------------
@@ -523,6 +538,36 @@ def steady_state(timings: Sequence[StreamBatchTimings]) -> Dict[str, float]:
 # the engine
 # ---------------------------------------------------------------------------
 
+# Jitted entry points are cached at module level, keyed by the static
+# arguments that shape the trace.  A supervised service loop constructs a
+# fresh StreamEngine after every crash/restore cycle (stream/recovery.py);
+# per-engine ``jax.jit`` wrappers would re-trace and re-compile the update
+# on every restart, turning recovery wall time into compile time.  With the
+# cache, restart N reuses restart 0's executable.
+
+@functools.lru_cache(maxsize=None)
+def _jitted_update(backend: str, donate: bool):
+    return jax.jit(
+        functools.partial(update_state, backend=backend),
+        donate_argnums=(0,) if donate else (),
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_snapshot(top_k: int, backend: str):
+    return jax.jit(
+        functools.partial(_snapshot_results, top_k=top_k, backend=backend)
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_sketch_update(backend: str, donate: bool):
+    return jax.jit(
+        functools.partial(update_sketch, backend=backend),
+        donate_argnums=(0,) if donate else (),
+    )
+
+
 class StreamEngine:
     """Stateful driver around the pure state transition.
 
@@ -539,25 +584,19 @@ class StreamEngine:
         self._state = init_state(
             cfg.link_capacity, cfg.ips, cfg.n_windows, cfg.ip_bins
         )
-        donate = (0,) if jax.default_backend() != "cpu" else ()
-        self._update = jax.jit(
-            functools.partial(update_state, backend=cfg.backend),
-            donate_argnums=donate,
-        )
-        self._snap = jax.jit(
-            functools.partial(
-                _snapshot_results, top_k=cfg.top_k, backend=cfg.backend
-            )
-        )
+        donate = jax.default_backend() != "cpu"
+        self._update = _jitted_update(cfg.backend, donate)
+        self._snap = _jitted_snapshot(cfg.top_k, cfg.backend)
         self._sketch_state = (
             init_sketch(cfg.sketch_config) if cfg.sketch_enabled else None
         )
-        self._sketch_update = jax.jit(
-            functools.partial(update_sketch, backend=cfg.backend),
-            donate_argnums=donate,
-        ) if cfg.sketch_enabled else None
+        self._sketch_update = (
+            _jitted_sketch_update(cfg.backend, donate)
+            if cfg.sketch_enabled else None
+        )
         self._algo = None  # jitted lazily: most streams never ask for it
         self.n_ingested = 0
+        self.health = IngestHealth()
 
     # -- state access --------------------------------------------------------
     @property
@@ -585,6 +624,69 @@ class StreamEngine:
             if self._sketch_state is None:
                 raise ValueError("sketch merge on a tier='exact' engine")
             self._sketch_state = merge_sketches(self._sketch_state, sketch)
+
+    def load(
+        self,
+        state: Optional[StreamState] = None,
+        sketch_state: Optional[SketchState] = None,
+        health: Optional[IngestHealth] = None,
+    ) -> None:
+        """Adopt restored state (stream/recovery.py checkpoint restore).
+
+        Leaves are re-placed with ``jax.device_put`` so every buffer is a
+        fresh distinct device allocation — the donation contract
+        (state.py) forbids aliased leaves, and restored numpy arrays may
+        share memory with checkpoint read buffers.
+        """
+        if state is not None:
+            self._state = jax.tree_util.tree_map(jax.device_put, state)
+        if sketch_state is not None:
+            if not self.cfg.sketch_enabled:
+                raise ValueError("sketch state loaded into a tier='exact' engine")
+            self._sketch_state = jax.tree_util.tree_map(
+                jax.device_put, sketch_state
+            )
+        if health is not None:
+            self.health = health
+
+    # -- graceful degradation ------------------------------------------------
+    def degrade(self, to_tier: str) -> None:
+        """Switch the active tier forward (exact -> both -> sketch) under
+        capacity pressure — DESIGN.md §2.7.
+
+        Forward-only: re-enabling the exact tier after its state froze
+        would silently un-count everything streamed in between.  When the
+        switch turns the sketch tier on for the first time, the fresh
+        sketch is *backfilled* from the exact link table — one weighted
+        ``update_sketch`` over the accumulated ``(src, dst, packets)``
+        rows — so its answers cover the full history, not just the tail
+        (the CSR rows live in the original-IP domain, same as the sketch's
+        input).  ``"sketch"`` freezes the exact state where it stands; its
+        final answers stay queryable but stop advancing.  The switch is
+        recorded in ``health.degraded_to``/``degraded_at_batch`` and
+        surfaced on every subsequent snapshot — never silent.
+        """
+        if to_tier not in _TIER_ORDER:
+            raise ValueError(f"unknown tier {to_tier!r}")
+        if _TIER_ORDER[to_tier] <= _TIER_ORDER[self.cfg.tier]:
+            raise ValueError(
+                f"degrade is forward-only: {self.cfg.tier!r} -> {to_tier!r}"
+            )
+        at_batch = int(self._state.n_batches) if self.cfg.exact_enabled \
+            else int(self._sketch_state.n_batches)
+        if self._sketch_state is None:
+            st = self._state
+            self._sketch_state = update_sketch(
+                init_sketch(self.cfg.sketch_config),
+                st.src, st.dst, st.n_links,
+                weights=st.packets, backend=self.cfg.backend,
+            )
+            self._sketch_update = _jitted_sketch_update(
+                self.cfg.backend, jax.default_backend() != "cpu"
+            )
+        self.cfg = dataclasses.replace(self.cfg, tier=to_tier)
+        self.health.degraded_to = to_tier
+        self.health.degraded_at_batch = at_batch
 
     # -- ingest --------------------------------------------------------------
     def ingest(self, src, dst, win, n_valid: Optional[int] = None) -> None:
@@ -644,6 +746,8 @@ class StreamEngine:
             n_ips=int(state.n_ips) if exact else None,
             overflow=int(state.overflow) if exact else None,
             sketch=sketch,
+            tier=self.cfg.tier,
+            health=dataclasses.replace(self.health),
         )
 
     def algorithms(self, source: int = 0):

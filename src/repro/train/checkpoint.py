@@ -29,12 +29,26 @@ import jax
 import numpy as np
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "restore_latest",
-           "latest_step", "gc_checkpoints"]
+           "latest_step", "read_manifest", "step_is_complete",
+           "complete_steps", "gc_checkpoints"]
 
 
 def _tree_paths(tree) -> Tuple[list, Any]:
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     return leaves, treedef
+
+
+def _step_dir(directory: str, step: int) -> str:
+    return os.path.join(directory, f"step_{step:08d}")
+
+
+def _all_steps(directory: str) -> list:
+    if not os.path.isdir(directory):
+        return []
+    return sorted(
+        int(d.split("_")[1]) for d in os.listdir(directory)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    )
 
 
 def save_checkpoint(directory: str, step: int, tree, extra: Optional[Dict] = None,
@@ -90,19 +104,51 @@ def latest_step(directory: str) -> Optional[int]:
         return None
     with open(path) as f:
         step = int(f.read().strip())
-    if not os.path.exists(os.path.join(directory, f"step_{step:08d}")):
+    if not os.path.exists(_step_dir(directory, step)):
         # LATEST ahead of a crashed commit — fall back to newest complete dir
-        steps = sorted(
-            int(d.split("_")[1]) for d in os.listdir(directory)
-            if d.startswith("step_") and not d.endswith(".tmp")
-        )
+        steps = _all_steps(directory)
         return steps[-1] if steps else None
     return step
 
 
+def read_manifest(directory: str, step: int) -> Dict:
+    """Parsed manifest of one committed step (raises if torn/missing)."""
+    with open(os.path.join(_step_dir(directory, step), "manifest.json")) as f:
+        return json.load(f)
+
+
+def step_is_complete(directory: str, step: int) -> bool:
+    """True iff the step directory is fully readable: the manifest parses
+    and every leaf file loads with its recorded shape/dtype.
+
+    The atomic rename protocol makes a torn *write* unobservable, but the
+    storage underneath can still lose or truncate files after commit (torn
+    fsync on power loss, partial copies, external tampering) — recovery
+    must skip such steps rather than crash mid-restore.
+    """
+    path = _step_dir(directory, step)
+    try:
+        manifest = read_manifest(directory, step)
+        if len(manifest["leaves"]) != manifest["n_leaves"]:
+            return False
+        for spec in manifest["leaves"]:
+            arr = np.load(os.path.join(path, spec["file"]))
+            if (list(arr.shape) != list(spec["shape"])
+                    or str(arr.dtype) != spec["dtype"]):
+                return False
+    except Exception:
+        return False
+    return True
+
+
+def complete_steps(directory: str) -> list:
+    """All fully-readable steps, ascending (the restore candidates)."""
+    return [s for s in _all_steps(directory) if step_is_complete(directory, s)]
+
+
 def restore_checkpoint(directory: str, step: int, target_tree):
     """Restore into the *structure* of ``target_tree`` (shape-checked)."""
-    path = os.path.join(directory, f"step_{step:08d}")
+    path = _step_dir(directory, step)
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     leaves, treedef = _tree_paths(target_tree)
@@ -122,20 +168,32 @@ def restore_checkpoint(directory: str, step: int, target_tree):
 
 
 def restore_latest(directory: str, target_tree):
-    step = latest_step(directory)
-    if step is None:
-        return None
-    tree, extra = restore_checkpoint(directory, step, target_tree)
-    return step, tree, extra
+    """Restore the newest *fully readable* step.
+
+    The ``LATEST`` pointer is a hint, not the authority: if its step
+    directory is missing, or the manifest / a leaf file is truncated
+    (post-commit storage damage — see :func:`step_is_complete`), the
+    restore falls back through older steps, newest first, and returns the
+    first one that validates.  Returns ``None`` when no step survives.
+    """
+    candidates = []
+    pointed = latest_step(directory)
+    if pointed is not None:
+        candidates.append(pointed)
+    candidates.extend(s for s in reversed(_all_steps(directory))
+                      if s not in candidates)
+    for step in candidates:
+        if not step_is_complete(directory, step):
+            continue
+        tree, extra = restore_checkpoint(directory, step, target_tree)
+        return step, tree, extra
+    return None
 
 
 def gc_checkpoints(directory: str, keep: int = 3) -> None:
-    steps = sorted(
-        int(d.split("_")[1]) for d in os.listdir(directory)
-        if d.startswith("step_") and not d.endswith(".tmp")
-    )
+    steps = _all_steps(directory)
     for s in steps[:-keep] if keep > 0 else []:
-        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"), ignore_errors=True)
+        shutil.rmtree(_step_dir(directory, s), ignore_errors=True)
     # always clear stale tmp dirs (crashed writers)
     for d in os.listdir(directory):
         if d.endswith(".tmp") and d.startswith("step_"):

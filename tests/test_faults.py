@@ -1,0 +1,371 @@
+"""Fault-injection layer tests: deterministic chaos schedules, the
+retry/backoff/quarantine policy of the resilient reader, plq page
+integrity (CRC32 + truncation), Prefetcher teardown, and checkpoint
+robustness to post-commit storage damage."""
+import json
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.data.faults import (
+    FaultConfig,
+    FaultInjector,
+    IngestHealth,
+    Quarantine,
+    ResilientReader,
+    RetryPolicy,
+    TransientIOError,
+    inspect_quarantine,
+    validate_chunk,
+)
+from repro.data.pipeline import Prefetcher
+from repro.data.plq import (
+    PlqCorruptionError,
+    plq_info,
+    read_plq,
+    read_plq_group,
+    write_plq,
+    read_plq_chunks,
+)
+
+
+# ------------------------------------------------------------- fixtures
+
+def _chunks(n_groups=6, rows=32):
+    return {
+        gi: {
+            "src": np.arange(rows, dtype=np.int32) + 1000 * gi,
+            "dst": np.arange(rows, dtype=np.int32) + 2000 * gi,
+        }
+        for gi in range(n_groups)
+    }
+
+
+def _reader(cfg, n_groups=6, rows=32, retry=None, quarantine=None,
+            start=0):
+    chunks = _chunks(n_groups, rows)
+    inj = FaultInjector(cfg, n_groups)
+    health = IngestHealth()
+    reader = ResilientReader(
+        lambda seq: dict(chunks[seq]),
+        inj.arrival_order(start),
+        health=health,
+        expected_rows={gi: rows for gi in range(n_groups)},
+        retry=retry or RetryPolicy(base_backoff_s=0.0),
+        injector=inj,
+        quarantine=quarantine,
+        sleep=lambda s: None,
+    )
+    return reader, inj, health, chunks
+
+
+# ------------------------------------------------ injector determinism
+
+def test_fault_draws_are_pure_functions_of_seed_and_seq():
+    cfg = FaultConfig(seed=7, transient_io_rate=0.5, corrupt_rate=0.5,
+                      duplicate_rate=0.5, reorder_rate=0.5, latency_rate=0.5)
+    a = FaultInjector(cfg, 64)
+    b = FaultInjector(cfg, 64)
+    # query b in reverse and twice — memoization and order must not matter
+    for seq in list(reversed(range(64))) + list(range(64)):
+        assert a.draw(seq) == b.draw(seq)
+    c = FaultInjector(FaultConfig(seed=8, transient_io_rate=0.5,
+                                  corrupt_rate=0.5, duplicate_rate=0.5,
+                                  reorder_rate=0.5, latency_rate=0.5), 64)
+    assert any(a.draw(s) != c.draw(s) for s in range(64)), \
+        "different seeds must draw different schedules"
+
+
+def test_arrival_order_suffix_matches_full_order():
+    """A resumed service (start = watermark) must see the same perturbed
+    delivery of the remaining groups as the original run saw for them."""
+    cfg = FaultConfig(seed=3, duplicate_rate=0.4, reorder_rate=0.4)
+    inj = FaultInjector(cfg, 40)
+    full = inj.arrival_order(0)
+    for start in (0, 7, 20, 39, 40):
+        suffix = inj.arrival_order(start)
+        assert sorted(set(suffix)) == list(range(start, 40))
+        # every group >= start appears with the same multiplicity
+        for s in range(start, 40):
+            assert suffix.count(s) == full.count(s) or inj.draw(s).reorder
+    assert inj.arrival_order(40) == []
+
+
+def test_injected_faults_clear_after_their_budget():
+    cfg = FaultConfig(seed=1, transient_io_rate=1.0, corrupt_rate=1.0,
+                      max_transient=2, max_torn=1)
+    inj = FaultInjector(cfg, 4)
+    chunks = _chunks(4)
+    d = inj.draw(0)
+    assert d.n_transient >= 1 and d.n_torn == 1
+    for attempt in range(d.n_transient):
+        with pytest.raises(TransientIOError):
+            inj.read(0, attempt, lambda s: dict(chunks[s]))
+    torn = inj.read(0, d.n_transient, lambda s: dict(chunks[s]))
+    assert validate_chunk(torn, 32) is not None
+    clean = inj.read(0, d.n_transient + d.n_torn, lambda s: dict(chunks[s]))
+    assert validate_chunk(clean, 32) is None
+    np.testing.assert_array_equal(clean["src"], chunks[0]["src"])
+
+
+# --------------------------------------------------- retry and backoff
+
+def test_retry_policy_backoff_is_bounded_exponential():
+    rp = RetryPolicy(max_attempts=8, base_backoff_s=0.01,
+                     max_backoff_s=0.05, multiplier=2.0)
+    walls = [rp.backoff(a) for a in range(8)]
+    assert walls[0] == pytest.approx(0.01)
+    assert walls[1] == pytest.approx(0.02)
+    assert walls == sorted(walls)
+    assert max(walls) == pytest.approx(0.05)
+    with pytest.raises(ValueError):
+        RetryPolicy(max_attempts=0)
+
+
+def test_resilient_reader_retries_transients_and_counts_them():
+    cfg = FaultConfig(seed=2, transient_io_rate=1.0, max_transient=2)
+    reader, inj, health, chunks = _reader(cfg)
+    slept = []
+    reader._sleep = slept.append
+    out = dict(reader)
+    assert sorted(out) == list(range(6))
+    for gi, chunk in out.items():
+        np.testing.assert_array_equal(chunk["src"], chunks[gi]["src"])
+    expected_retries = sum(inj.draw(s).n_transient for s in range(6))
+    assert health.io_retries == expected_retries == len(slept) > 0
+    assert health.quarantined == health.lost_batches == 0
+
+
+def test_resilient_reader_quarantines_torn_copies_then_reads_clean():
+    cfg = FaultConfig(seed=5, corrupt_rate=1.0, max_torn=1)
+    q = Quarantine()
+    reader, inj, health, chunks = _reader(cfg, quarantine=q)
+    out = dict(reader)
+    for gi, chunk in out.items():
+        assert chunk is not None
+        np.testing.assert_array_equal(chunk["dst"], chunks[gi]["dst"])
+    assert health.quarantined == 6 and health.lost_batches == 0
+    assert len(q.records) == 6
+    assert all(r["reason"] for r in q.records)
+
+
+def test_retry_budget_exhaustion_is_a_counted_lost_batch(tmp_path):
+    """At-rest corruption (every retry torn) must lose the batch *loudly*:
+    lost_batches counted, dead letter persisted, chunk yielded as None."""
+    cfg = FaultConfig(seed=0, corrupt_rate=1.0, max_torn=1)
+    q = Quarantine(str(tmp_path / "dead"))
+    reader, inj, health, _ = _reader(
+        cfg, retry=RetryPolicy(max_attempts=1, base_backoff_s=0.0),
+        quarantine=q,
+    )
+    out = dict(reader)
+    assert all(v is None for v in out.values())
+    assert health.lost_batches == 6
+    assert health.quarantined == 6  # the one allowed attempt, always torn
+    recs = inspect_quarantine(str(tmp_path / "dead"))
+    assert len(recs) == 12  # 6 torn copies + 6 budget-exhausted markers
+    assert sum(r["attempt"] == -1 for r in recs) == 6
+    # the torn payloads themselves are on disk for forensics
+    assert any(f.endswith(".npz") for f in os.listdir(tmp_path / "dead"))
+
+
+def test_validate_chunk_rejects_structural_damage():
+    good = {"a": np.arange(4), "b": np.arange(4)}
+    assert validate_chunk(good, 4) is None
+    assert validate_chunk(good, 5) is not None            # truncated vs footer
+    assert validate_chunk({}, None) is not None           # no columns
+    assert validate_chunk({"a": np.arange(4), "b": np.arange(3)}) is not None
+    assert validate_chunk({"a": np.zeros((2, 2))}) is not None
+
+
+# ----------------------------------------------------- plq page integrity
+
+def test_plq_crc_detects_bitflip_and_truncation(tmp_path):
+    path = str(tmp_path / "x.plq")
+    cols = {"src": np.arange(100, dtype=np.int32),
+            "dst": np.arange(100, dtype=np.int32) * 3}
+    write_plq(path, cols, row_group_size=40)
+    info = plq_info(path)
+    assert all("crc32" in g["pages"][k] for g in info["groups"]
+               for k in ("src", "dst"))
+    # clean read round-trips
+    for gi in range(3):
+        chunk = read_plq_group(path, gi, info=info)
+        np.testing.assert_array_equal(
+            chunk["src"], cols["src"][gi * 40:(gi + 1) * 40])
+    # flip one byte inside group 1's src page
+    page = info["groups"][1]["pages"]["src"]
+    with open(path, "r+b") as f:
+        f.seek(page["offset"] + 5)
+        b = f.read(1)
+        f.seek(page["offset"] + 5)
+        f.write(bytes([b[0] ^ 0xFF]))
+    with pytest.raises(PlqCorruptionError) as ei:
+        read_plq_group(path, 1, info=info)
+    assert ei.value.group == 1 and ei.value.column == "src"
+    # other groups still read clean; validate=False skips the check
+    read_plq_group(path, 0, info=info)
+    read_plq_group(path, 2, info=info)
+    read_plq_group(path, 1, validate=False, info=info)
+    with pytest.raises(IndexError):
+        read_plq_group(path, 3, info=info)
+
+
+def test_plq_truncated_tail_page_raises(tmp_path):
+    path = str(tmp_path / "t.plq")
+    write_plq(path, {"src": np.arange(64, dtype=np.int64)},
+              row_group_size=64)
+    info = plq_info(path)  # footer parsed before we shear the page
+    page = info["groups"][0]["pages"]["src"]
+    with open(path, "r+b") as f:
+        f.truncate(page["offset"] + page["nbytes"] - 8)
+    with pytest.raises(PlqCorruptionError, match="truncated"):
+        read_plq_group(path, 0, info=info)
+
+
+def test_plq_files_without_checksums_stay_readable(tmp_path):
+    """Backward compatibility: a footer without crc32 keys skips the check."""
+    path = str(tmp_path / "old.plq")
+    write_plq(path, {"v": np.arange(10, dtype=np.int32)}, row_group_size=10)
+    info = plq_info(path)
+    for g in info["groups"]:
+        for p in g["pages"].values():
+            del p["crc32"]
+    # emulate an old file by rewriting the footer without checksums
+    with open(path, "rb") as f:
+        raw = f.read()
+    body_end = info["groups"][-1]["pages"]["v"]["offset"] + \
+        info["groups"][-1]["pages"]["v"]["nbytes"]
+    fj = json.dumps(info).encode()
+    with open(path, "wb") as f:
+        f.write(raw[:body_end])
+        f.write(fj)
+        f.write(np.uint64(len(fj)).tobytes())
+        f.write(raw[-8:])
+    chunk = read_plq_group(path, 0)
+    np.testing.assert_array_equal(chunk["v"], np.arange(10))
+    np.testing.assert_array_equal(read_plq(path)["v"], np.arange(10))
+
+
+# ------------------------------------------------- Prefetcher teardown
+
+def test_prefetcher_close_is_idempotent_and_joins_thread():
+    def gen():
+        for i in range(10_000):
+            yield i
+
+    pf = Prefetcher(gen(), depth=2)
+    assert next(pf) == 0
+    pf.close()
+    pf.close()  # idempotent
+    pf.join(1.0)
+    assert not pf._t.is_alive()
+    with pytest.raises(StopIteration):
+        next(pf)
+
+
+def test_prefetcher_context_manager_never_leaks_thread_on_crash():
+    before = threading.active_count()
+
+    def infinite():
+        i = 0
+        while True:
+            yield i
+            i += 1
+
+    with pytest.raises(RuntimeError, match="consumer died"):
+        with Prefetcher(infinite(), depth=2) as pf:
+            assert next(pf) == 0
+            raise RuntimeError("consumer died")
+    deadline = time.monotonic() + 2.0
+    while threading.active_count() > before and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert threading.active_count() <= before
+
+
+def test_prefetcher_clean_exhaustion_still_delivers_everything():
+    with Prefetcher(iter(range(7)), depth=2) as pf:
+        assert list(pf) == list(range(7))
+
+
+def test_prefetcher_producer_error_still_fails_fast_after_close_support():
+    def bad():
+        yield 1
+        raise ValueError("boom")
+
+    pf = Prefetcher(bad(), depth=2)
+    pf.join(2.0)
+    with pytest.raises(ValueError, match="boom"):
+        list(pf)
+    pf.close()  # teardown after failure must not raise
+
+
+# ----------------------------------- checkpoint robustness (train tier)
+
+def _tree(i):
+    return {"a": np.full((4,), i, np.int32), "b": np.arange(3) * i}
+
+
+def test_restore_latest_skips_torn_steps(tmp_path):
+    from repro.train.checkpoint import (
+        complete_steps,
+        restore_latest,
+        save_checkpoint,
+        step_is_complete,
+    )
+
+    d = str(tmp_path)
+    for i in (1, 2, 3):
+        save_checkpoint(d, i, _tree(i), keep=10)
+    # damage the newest step: truncate one leaf file post-commit
+    leaf = os.path.join(d, "step_00000003", "leaf_00000.npy")
+    with open(leaf, "r+b") as f:
+        f.truncate(os.path.getsize(leaf) - 4)
+    assert not step_is_complete(d, 3)
+    assert complete_steps(d) == [1, 2]
+    step, tree, _ = restore_latest(d, _tree(0))
+    assert step == 2
+    np.testing.assert_array_equal(tree["a"], _tree(2)["a"])
+    # damage step 2's manifest too — falls back to step 1
+    with open(os.path.join(d, "step_00000002", "manifest.json"), "w") as f:
+        f.write("{ not json")
+    step, tree, _ = restore_latest(d, _tree(0))
+    assert step == 1
+    # destroy everything readable -> None, not a crash
+    for s in (1, 2, 3):
+        os.remove(os.path.join(d, f"step_{s:08d}", "manifest.json"))
+    assert restore_latest(d, _tree(0)) is None
+
+
+def test_restore_latest_survives_missing_pointed_step(tmp_path):
+    import shutil
+
+    from repro.train.checkpoint import restore_latest, save_checkpoint
+
+    d = str(tmp_path)
+    save_checkpoint(d, 5, _tree(5), keep=10)
+    save_checkpoint(d, 6, _tree(6), keep=10)
+    shutil.rmtree(os.path.join(d, "step_00000006"))  # LATEST now dangles
+    step, tree, _ = restore_latest(d, _tree(0))
+    assert step == 5
+    np.testing.assert_array_equal(tree["b"], _tree(5)["b"])
+
+
+def test_gc_checkpoints_retention_and_tmp_cleanup(tmp_path):
+    from repro.train.checkpoint import gc_checkpoints, save_checkpoint
+
+    d = str(tmp_path)
+    for i in range(6):
+        save_checkpoint(d, i, _tree(i), keep=3)
+    kept = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+    assert kept == ["step_00000003", "step_00000004", "step_00000005"]
+    # a crashed writer's tmp dir is swept on the next gc
+    os.makedirs(os.path.join(d, "step_00000099.tmp"))
+    gc_checkpoints(d, keep=3)
+    assert not os.path.exists(os.path.join(d, "step_00000099.tmp"))
+    # keep=0 means retain everything (gc disabled), still sweeps tmps
+    gc_checkpoints(d, keep=0)
+    assert sorted(x for x in os.listdir(d) if x.startswith("step_")) == kept

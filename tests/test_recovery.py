@@ -1,0 +1,332 @@
+"""Crash-recovery battery (DESIGN.md §2.7): watermarked checkpoint
+round-trips, kill/restore at every batch boundary with bit-identical
+state on both analytic tiers, the chaos cocktail + crash gate, and
+graceful sketch-tier degradation under capacity pressure."""
+import dataclasses
+import os
+
+import numpy as np
+import jax
+import pytest
+
+from repro.challenge.pipeline import window_column
+from repro.data.faults import FaultConfig, IngestHealth, RetryPolicy
+from repro.data.plq import write_plq
+from repro.data.rmat import synthetic_packets
+from repro.stream import (
+    DegradePolicy,
+    SimulatedCrash,
+    StreamCheckpointer,
+    StreamConfig,
+    StreamEngine,
+    run_service,
+    stream_plq,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+N, BATCH, NW = 2048, 256, 3
+N_BATCHES = N // BATCH
+
+
+# --------------------------------------------------------------- fixtures
+
+@pytest.fixture(scope="module")
+def capture(tmp_path_factory):
+    d = tmp_path_factory.mktemp("cap")
+    cols = synthetic_packets(N, scale=10, seed=0)
+    path = str(d / "cap.plq")
+    write_plq(path, cols, row_group_size=BATCH)
+    return path, window_column(cols["ts"], NW)
+
+
+def _cfg(tier="exact", link_capacity=N, **kw):
+    return StreamConfig(
+        batch_capacity=BATCH, link_capacity=link_capacity, n_windows=NW,
+        ip_bins=64, top_k=5, backend="xla", tier=tier, **kw,
+    )
+
+
+def _oracle(cfg, capture):
+    """The uninterrupted fault-free run every recovery must match."""
+    path, win = capture
+    eng = StreamEngine(cfg)
+    stream_plq(eng, path, win)
+    return eng
+
+
+def _assert_trees_equal(a, b, what=""):
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    assert ta == tb, f"{what}: treedef mismatch"
+    for i, (x, y) in enumerate(zip(la, lb)):
+        np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y),
+            err_msg=f"{what}: leaf {i} diverged",
+        )
+
+
+def _assert_scalars_equal(snap, oracle_snap):
+    want = oracle_snap.results.scalars.as_dict()
+    got = snap.results.scalars.as_dict()
+    for k, v in want.items():
+        assert int(got[k]) == int(v), f"scalar {k}: {int(got[k])} != {int(v)}"
+
+
+# ------------------------------------------------- checkpointer roundtrip
+
+def test_checkpointer_watermark_roundtrip(capture, tmp_path):
+    path, win = capture
+    cfg = _cfg(tier="both")
+    eng = _oracle(cfg, capture)
+    ck = StreamCheckpointer(str(tmp_path), cfg)
+    ck.save(eng, watermark=N_BATCHES)
+    # the step number IS the watermark
+    assert os.path.isdir(tmp_path / f"step_{N_BATCHES:08d}")
+    rp = StreamCheckpointer(str(tmp_path), cfg).restore_latest()
+    assert rp is not None and rp.watermark == N_BATCHES
+    assert rp.tier == "both" and rp.sketch_state is not None
+    _assert_trees_equal(rp.state, eng.state, "exact state")
+    _assert_trees_equal(rp.sketch_state, eng.sketch_state, "sketch state")
+    assert rp.health.checkpoints_committed == 1
+
+
+def test_checkpointer_rejects_foreign_geometry(capture, tmp_path):
+    cfg = _cfg()
+    eng = _oracle(cfg, capture)
+    StreamCheckpointer(str(tmp_path), cfg).save(eng, watermark=N_BATCHES)
+    other = _cfg(link_capacity=N // 2)
+    assert StreamCheckpointer(str(tmp_path), other).restore_latest() is None
+
+
+def test_checkpointer_falls_back_over_torn_step(capture, tmp_path):
+    path, win = capture
+    cfg = _cfg()
+    eng = StreamEngine(cfg)
+    ck = StreamCheckpointer(str(tmp_path), cfg, keep=10)
+    walls = []
+    stream_plq(eng, path, win,
+               on_batch=lambda i, e: walls.append(ck.save(e, watermark=i + 1)))
+    leaf = os.path.join(walls[-1], "leaf_00000.npy")
+    with open(leaf, "r+b") as f:  # post-commit storage damage
+        f.truncate(os.path.getsize(leaf) - 4)
+    rp = StreamCheckpointer(str(tmp_path), cfg).restore_latest()
+    assert rp is not None and rp.watermark == N_BATCHES - 1
+
+
+# ----------------------------------- kill/restore at every batch boundary
+
+@pytest.mark.parametrize("crash_at", range(N_BATCHES))
+def test_crash_at_every_batch_boundary_exact_tier(capture, tmp_path, crash_at):
+    """Kill after each batch in turn; the recovered service's state — and
+    therefore all 14 queries — must be bit-identical to an uninterrupted
+    run.  The crash fires after the fold but before its commit, so exactly
+    the uncommitted batch replays."""
+    path, win = capture
+    cfg = _cfg()
+    report = run_service(
+        cfg, path, win,
+        checkpoint_dir=str(tmp_path / "ck"),
+        faults=FaultConfig(crash_at_batch=crash_at),
+    )
+    oracle = _oracle(cfg, capture)
+    _assert_trees_equal(report.engine.state, oracle.state, "exact state")
+    _assert_scalars_equal(report.snapshot(), oracle.snapshot())
+    h = report.health
+    assert report.restarts == 1 and h.crashes_recovered == 1
+    assert h.batches_replayed == 1 and h.lost_batches == 0
+    # batch crash_at's commit never happened in life 1; life 2 commits it
+    # after the replay — exactly one commit per batch, no double count
+    assert h.checkpoints_committed == N_BATCHES
+    assert report.watermark == N_BATCHES
+    assert report.snapshot().reliable
+
+
+@pytest.mark.parametrize("crash_at", range(N_BATCHES))
+def test_crash_at_every_batch_boundary_sketch_tier(capture, tmp_path, crash_at):
+    """Same battery on tier='both': the sketch state must also restore and
+    replay bit-identically (its folds are order-dependent too)."""
+    path, win = capture
+    cfg = _cfg(tier="both")
+    report = run_service(
+        cfg, path, win,
+        checkpoint_dir=str(tmp_path / "ck"),
+        faults=FaultConfig(crash_at_batch=crash_at),
+    )
+    oracle = _oracle(cfg, capture)
+    _assert_trees_equal(report.engine.state, oracle.state, "exact state")
+    _assert_trees_equal(report.engine.sketch_state, oracle.sketch_state,
+                        "sketch state")
+    snap, osnap = report.snapshot(), oracle.snapshot()
+    _assert_scalars_equal(snap, osnap)
+    assert snap.sketch.n_packets == osnap.sketch.n_packets == N
+    np.testing.assert_array_equal(snap.sketch.top_link_packets,
+                                  osnap.sketch.top_link_packets)
+
+
+def test_crash_without_checkpoint_dir_replays_from_zero(capture):
+    """No durable state: recovery degenerates to a full re-fold — still
+    exactly-once (the dead engine's memory is discarded wholesale)."""
+    path, win = capture
+    cfg = _cfg()
+    report = run_service(
+        cfg, path, win, faults=FaultConfig(crash_at_batch=5),
+    )
+    oracle = _oracle(cfg, capture)
+    _assert_trees_equal(report.engine.state, oracle.state, "exact state")
+    assert report.restarts == 1
+    assert report.health.batches_replayed == 6  # groups [0, 5] re-folded
+
+
+def test_crash_budget_exhaustion_propagates(capture, tmp_path):
+    path, win = capture
+    with pytest.raises(SimulatedCrash):
+        run_service(
+            _cfg(), path, win,
+            checkpoint_dir=str(tmp_path / "ck"),
+            faults=FaultConfig(crash_at_batch=2),
+            max_restarts=0,
+        )
+
+
+# ---------------------------------------------- chaos cocktail + crash
+
+def test_chaos_cocktail_plus_crash_is_bit_identical_and_never_silent(
+        capture, tmp_path):
+    """The headline gate: transient IO + torn reads + duplicates +
+    reorders + one process death, and the recovered service still answers
+    every query bit-identically to a fault-free uninterrupted run — with
+    every fault event counted on the snapshot's health ledger."""
+    path, win = capture
+    cfg = _cfg(tier="both")
+    faults = FaultConfig(
+        seed=11, transient_io_rate=0.4, corrupt_rate=0.4,
+        duplicate_rate=0.3, reorder_rate=0.3, crash_at_batch=4,
+    )
+    report = run_service(
+        cfg, path, win,
+        checkpoint_dir=str(tmp_path / "ck"),
+        faults=faults,
+        retry=RetryPolicy(base_backoff_s=0.0),
+        quarantine_dir=str(tmp_path / "dead"),
+    )
+    oracle = _oracle(cfg, capture)
+    _assert_trees_equal(report.engine.state, oracle.state, "exact state")
+    _assert_trees_equal(report.engine.sketch_state, oracle.sketch_state,
+                        "sketch state")
+    _assert_scalars_equal(report.snapshot(), oracle.snapshot())
+
+    h = report.health
+    assert h.lost_batches == 0 and report.snapshot().reliable
+    assert h.faults_seen > 0, "the cocktail must actually have fired"
+    assert h.crashes_recovered == 1
+    # chaos is seeded: a second run observes the identical fault ledger
+    report2 = run_service(
+        cfg, path, win,
+        checkpoint_dir=str(tmp_path / "ck2"),
+        faults=faults,
+        retry=RetryPolicy(base_backoff_s=0.0),
+    )
+    assert report2.health.as_dict() == h.as_dict()
+
+
+def test_unrecoverable_batches_are_counted_never_silent(capture, tmp_path):
+    """At-rest corruption (every retry torn) must surface as lost_batches,
+    flip snapshot.reliable, and leave a dead-letter trail — the stream
+    keeps going past the hole instead of wedging."""
+    path, win = capture
+    report = run_service(
+        _cfg(), path, win,
+        faults=FaultConfig(seed=1, corrupt_rate=1.0, max_torn=1),
+        retry=RetryPolicy(max_attempts=1, base_backoff_s=0.0),
+        quarantine_dir=str(tmp_path / "dead"),
+    )
+    snap = report.snapshot()
+    assert report.health.lost_batches == N_BATCHES
+    assert snap.health.lost_batches == N_BATCHES
+    assert not snap.reliable
+    assert snap.n_packets == 0
+    assert os.path.exists(tmp_path / "dead" / "quarantine.jsonl")
+
+
+# ------------------------------------------------- graceful degradation
+
+def test_degradation_sheds_exact_tier_before_overflow(capture):
+    """Pressure-driven exact -> both -> sketch under a tight link budget:
+    the switch must fire before any overflow, be recorded on the snapshot,
+    and the backfilled sketch must cover the *full* history."""
+    path, win = capture
+    cap = 1500  # oracle run builds ~1.9k links from this capture
+    cfg = _cfg(link_capacity=cap, ip_capacity=4 * N)
+    policy = DegradePolicy(to_both=0.5, to_sketch=1 - BATCH / cap)
+    report = run_service(cfg, path, win, degrade=policy)
+    snap = report.snapshot()
+    assert snap.tier == "sketch"
+    assert report.health.degraded_to == "sketch"
+    assert report.health.degraded_at_batch is not None
+    assert int(report.engine.state.overflow) == 0, \
+        "degradation must beat overflow (headroom rule)"
+    assert snap.overflow is None and snap.results is None
+    assert snap.sketch is not None
+    assert snap.sketch.n_packets == N, \
+        "backfill must cover history before the switch, not just the tail"
+    assert snap.reliable
+
+
+def test_degradation_survives_crash_and_restore(capture, tmp_path):
+    """Crash after the tier switch: the restored service must come back
+    *degraded* (tier travels in the checkpoint) and finish bit-identically
+    to the uninterrupted degraded run."""
+    path, win = capture
+    cap = 1500
+    cfg = _cfg(link_capacity=cap, ip_capacity=4 * N)
+    policy = DegradePolicy(to_both=0.3, to_sketch=1 - BATCH / cap)
+    uninterrupted = run_service(cfg, path, win, degrade=policy)
+    assert uninterrupted.health.degraded_to == "sketch"
+    report = run_service(
+        cfg, path, win,
+        checkpoint_dir=str(tmp_path / "ck"),
+        faults=FaultConfig(crash_at_batch=N_BATCHES - 1),
+        degrade=policy,
+    )
+    assert report.health.degraded_to == "sketch"
+    assert report.health.degraded_at_batch == \
+        uninterrupted.health.degraded_at_batch
+    _assert_trees_equal(report.engine.state, uninterrupted.engine.state,
+                        "frozen exact state")
+    _assert_trees_equal(report.engine.sketch_state,
+                        uninterrupted.engine.sketch_state, "sketch state")
+
+
+def test_degrade_is_forward_only():
+    eng = StreamEngine(_cfg(tier="both"))
+    with pytest.raises(ValueError, match="forward-only"):
+        eng.degrade("exact")
+    eng2 = StreamEngine(_cfg(tier="sketch"))
+    with pytest.raises(ValueError, match="forward-only"):
+        eng2.degrade("both")
+    with pytest.raises(ValueError, match="unknown tier"):
+        StreamEngine(_cfg()).degrade("bogus")
+
+
+def test_degrade_policy_validates():
+    with pytest.raises(ValueError):
+        DegradePolicy(to_both=0.9, to_sketch=0.5)
+    with pytest.raises(ValueError):
+        DegradePolicy(to_both=0.0)
+    with pytest.raises(ValueError):
+        DegradePolicy(check_every=0)
+
+
+# ------------------------------------------------------- snapshot health
+
+def test_snapshot_surfaces_health_and_tier(capture):
+    path, win = capture
+    report = run_service(_cfg(), path, win)
+    snap = report.snapshot()
+    assert snap.tier == "exact"
+    assert isinstance(snap.health, IngestHealth)
+    assert snap.health.faults_seen == 0 and snap.reliable
+    # the snapshot's ledger is a copy, not a live alias
+    report.engine.health.lost_batches = 99
+    assert snap.health.lost_batches == 0
