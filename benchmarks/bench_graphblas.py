@@ -38,7 +38,7 @@ from repro.challenge.pipeline import analyze_peak_buffer_bytes
 from repro.core import Table, run_all_queries, run_all_queries_csr
 from repro.core.temporal import windowed_queries
 
-from .common import emit, packet_arrays, time_fn
+from .common import emit, packet_arrays, run_manifest, time_fn
 
 # the memory A/B compiles analyze twice; a larger window axis makes the
 # dense grids' O(n_windows × capacity) term dominate (tests pin >= 4x here)
@@ -141,9 +141,27 @@ def run(
         "n_windows": float(MEMORY_AB_WINDOWS),
     }
 
+    # ---- roofline: both scalar-suite programs + the windowed CSR scan,
+    # each against the already-measured steady wall of its own compiled
+    # program (launch/roofline.program_roofline, ROADMAP item 5) ----
+    from repro.launch.roofline import program_roofline
+
+    roofline = {
+        "csr_all14": program_roofline(jcsr.lower(t).compile().as_text(), t_csr),
+        "jaxdf_all14": program_roofline(jall.lower(t).compile().as_text(), t_jax),
+        "windowed_csr": program_roofline(
+            jw_csr.lower(tw).compile().as_text(), t_wcsr),
+    }
+    for kname, rf in roofline.items():
+        emit(f"roofline/{kname}", rf["wall_s"],
+             f"{rf['roofline_fraction']:.4f} of peak "
+             f"({rf['bottleneck']}-bound, "
+             f"{rf['achieved_bytes_per_s'] / 1e9:.2f} GB/s)")
+
     if json_path:
         payload = {"n": n, "iters": iters,
-                   "backend": jax.default_backend(), "rows": rows}
+                   "backend": jax.default_backend(), "rows": rows,
+                   "roofline": roofline, "manifest": run_manifest()}
         with open(json_path, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"# wrote {json_path} ({len(rows)} rows)", flush=True)

@@ -30,7 +30,7 @@ from repro.core.plan import count_hlo_sorts
 from repro.core.ref import ref_run_all_queries, ref_traffic_matrix
 from repro.core.temporal import windowed_queries, windowed_queries_naive
 
-from .common import emit, packet_arrays, time_fn
+from .common import emit, kernel_roofline, packet_arrays, run_manifest, time_fn
 
 QUERIES = {
     "valid_packets": (Q.valid_packets, lambda s, d: int(len(s))),
@@ -142,13 +142,62 @@ def run(
                f"plan_speedup={t_win_naive / t_win:.2f}x correct=True n={n}",
                sorts=_hlo_sorts(jwin_naive, tw))
 
+    # ---- roofline: the challenge kernels + the all-14 program, achieved
+    # bytes/s and flops/s vs the backend peak (ROADMAP item 5; the fractions
+    # are what the CI gate pins as non-null) ----
+    roofline = _roofline_section(t, jall, t_all, src, iters)
+    for kname, rf in roofline.items():
+        emit(f"roofline/{kname}", rf["wall_s"],
+             f"{rf['roofline_fraction']:.4f} of peak "
+             f"({rf['bottleneck']}-bound, "
+             f"{rf['achieved_bytes_per_s'] / 1e9:.2f} GB/s)")
+
     if json_path:
         payload = {"n": n, "iters": iters, "ab": ab,
-                   "backend": jax.default_backend(), "rows": rows}
+                   "backend": jax.default_backend(), "rows": rows,
+                   "roofline": roofline, "manifest": run_manifest()}
         with open(json_path, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"# wrote {json_path} ({len(rows)} rows)", flush=True)
     return rows
+
+
+def _roofline_section(t, jall, t_all: float, src: np.ndarray,
+                      iters: int) -> Dict[str, Dict]:
+    """Achieved-vs-peak for the three challenge kernels + the full suite.
+
+    The kernels run at their bench shapes (ids from the same RMAT packet
+    stream, 1024 bins/segments, a 4x2048 CMS) on the dispatch path the
+    engine uses (``backend="auto"``); the all-14 row reuses the already
+    compiled+timed program rather than re-measuring it.
+    """
+    from repro.kernels.ops import cms_update, histogram, segmented_reduce
+    from repro.launch.roofline import program_roofline
+
+    n = src.shape[0]
+    bins = 1024
+    ids = jnp.asarray(src.astype(np.int32) % bins)
+    vals = jnp.ones((n,), jnp.float32)
+    depth, width = 4, 2048
+    counts = jnp.zeros((depth, width), jnp.int32)
+    cols = jnp.asarray(
+        np.random.default_rng(1).integers(0, width, (depth, n)).astype(np.int32)
+    )
+    props = jnp.ones((n,), jnp.int32)
+
+    out = {
+        "histogram": kernel_roofline(
+            lambda i: histogram(i, bins), ids, iters=iters),
+        "segmented_reduce": kernel_roofline(
+            lambda v, s: segmented_reduce(v, s, bins, op="max"),
+            vals, ids, iters=iters),
+        "cms_update": kernel_roofline(
+            lambda c, ci, p: cms_update(c, ci, p),
+            counts, cols, props, iters=iters),
+        "all14_pipeline": program_roofline(
+            jall.lower(t).compile().as_text(), t_all),
+    }
+    return out
 
 
 def main(argv=None) -> int:

@@ -32,6 +32,7 @@ import numpy as np
 from repro.challenge.pipeline import window_column
 from repro.data.faults import FaultConfig
 from repro.data.plq import read_plq
+from repro.obs import Histogram
 from repro.stream.engine import StreamConfig, steady_state
 from repro.stream.recovery import run_service
 from repro.stream.run import prepare_capture
@@ -41,6 +42,21 @@ from repro.stream.run import prepare_capture
 MAX_PACKETS = 1 << 17
 N_WINDOWS = 8
 IP_BINS = 1024
+
+
+def _batch_latency(report) -> Dict[str, float]:
+    """p50/p99 of the run's steady (compile-excluded) per-fold walls.
+
+    Goes through the obs fixed-bucket histogram — the same estimator the
+    serve CLI and CI telemetry smoke report — so the BENCH trajectory and
+    the live metrics agree on what "p99 batch latency" means.
+    """
+    h = Histogram("serve_fold_seconds")
+    for t in report.timings:
+        if not t.compile:
+            h.observe(t.total_s)
+    return {"p50_s": h.quantile(0.5), "p99_s": h.quantile(0.99),
+            "count": h.count}
 
 
 def run(n: int = 1 << 17, json_path: Optional[str] = None) -> Dict[str, Dict]:
@@ -65,7 +81,8 @@ def run(n: int = 1 << 17, json_path: Optional[str] = None) -> Dict[str, Dict]:
         report = run_service(cfg, path, win_full, **kw)
         wall = time.perf_counter() - t0
         ss = steady_state(report.timings)
-        return {"report": report, "wall_s": wall, "steady": ss}
+        return {"report": report, "wall_s": wall, "steady": ss,
+                "latency": _batch_latency(report)}
 
     rows: Dict[str, Dict] = {}
 
@@ -83,6 +100,7 @@ def run(n: int = 1 << 17, json_path: Optional[str] = None) -> Dict[str, Dict]:
         "steady_packets_per_s": base["steady"]["packets_per_s"],
         "steady_batch_s": base["steady"]["batch_s"],
         "n_batches": n_batches,
+        "batch_latency": base["latency"],
     }
 
     # ---- checkpointed: the durability tax ----
@@ -95,6 +113,7 @@ def run(n: int = 1 << 17, json_path: Optional[str] = None) -> Dict[str, Dict]:
     rows["checkpointed"] = {
         "wall_s": ck["wall_s"],
         "steady_packets_per_s": ck["steady"]["packets_per_s"],
+        "batch_latency": ck["latency"],
         "commits": len(walls),
         "commit_wall_mean_s": ck_mean,
         "commit_wall_total_s": float(sum(walls)),
@@ -125,6 +144,7 @@ def run(n: int = 1 << 17, json_path: Optional[str] = None) -> Dict[str, Dict]:
          f"{'bit-identical' if identical else 'DIVERGED'}")
     rows["recovery"] = {
         "wall_s": rec["wall_s"],
+        "batch_latency": rec["latency"],
         "restarts": rep.restarts,
         "restore_wall_s": restore,
         "replay_wall_s": rep.replay_wall_s,
@@ -135,10 +155,38 @@ def run(n: int = 1 << 17, json_path: Optional[str] = None) -> Dict[str, Dict]:
         "health": rep.health.as_dict(),
     }
 
+    # ---- roofline of the fold program itself: lower update_state at this
+    # config's static shapes, charge it the baseline's steady update wall ----
+    import jax
+    import jax.numpy as jnp
+
+    from repro.launch.roofline import program_roofline
+    from repro.stream.engine import update_state
+    from repro.stream.state import init_state
+
+    state0 = init_state(cfg.link_capacity, cfg.ips, cfg.n_windows, cfg.ip_bins)
+    z = jnp.zeros((batch,), jnp.int32)
+    fold_fn = jax.jit(lambda s, a, b, c, nv: update_state(s, a, b, c, nv))
+    fold_hlo = fold_fn.lower(
+        state0, z, z, z, jnp.asarray(batch, jnp.int32)).compile().as_text()
+    roofline = {
+        "fold": program_roofline(fold_hlo, base["steady"]["update_s"]),
+    }
+    emit("roofline/fold", roofline["fold"]["wall_s"],
+         f"{roofline['fold']['roofline_fraction']:.4f} of peak "
+         f"({roofline['fold']['bottleneck']}-bound)")
+    emit("serve/batch_latency", base["latency"]["p99_s"],
+         f"baseline p50={base['latency']['p50_s'] * 1e3:.2f}ms "
+         f"p99={base['latency']['p99_s'] * 1e3:.2f}ms "
+         f"over {base['latency']['count']} steady folds")
+
     if json_path:
+        from .common import run_manifest
+
         with open(json_path, "w") as fh:
             json.dump({"n": n_eff, "scale": scale, "batch": batch,
-                       "runs": rows}, fh, indent=2)
+                       "runs": rows, "roofline": roofline,
+                       "manifest": run_manifest()}, fh, indent=2)
         print(f"serve/json,0,wrote {json_path}", flush=True)
 
     if not identical:

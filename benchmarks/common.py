@@ -8,8 +8,46 @@ import jax
 import numpy as np
 
 from repro.data.rmat import synthetic_packets
+from repro.obs import SCHEMA_VERSION, run_context
 
-__all__ = ["time_fn", "emit", "packet_arrays"]
+__all__ = ["time_fn", "emit", "packet_arrays", "run_manifest",
+           "kernel_roofline"]
+
+
+def run_manifest() -> Dict:
+    """The provenance stamp every ``BENCH_*.json`` carries (ISSUE: the
+    trajectory must be diffable across PRs without out-of-band notes).
+
+    Host-side by construction — the timestamp is taken here, outside any
+    jit, and passed into the payload as data.
+    """
+    ctx = run_context()
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "git_sha": ctx["git_sha"],
+        "backend": ctx["backend"],
+        "device": str(jax.devices()[0]),
+        "jax_version": ctx["jax_version"],
+        "python": ctx["python"],
+        "timestamp": time.time(),
+    }
+
+
+def kernel_roofline(fn: Callable, *args, iters: int = 5) -> Dict:
+    """Compile ``fn`` once, time it steady-state, report achieved-vs-peak.
+
+    One definition shared by every lane: ``jit(fn)`` is lowered/compiled
+    for the given arguments, the *same* executable is timed with
+    :func:`time_fn` (compile excluded — the warmup call hits the jit
+    cache), and its post-optimization HLO + wall feed
+    :func:`repro.launch.roofline.program_roofline`.
+    """
+    from repro.launch.roofline import program_roofline
+
+    jitted = jax.jit(fn)
+    compiled = jitted.lower(*args).compile()
+    wall = time_fn(jitted, *args, iters=iters)
+    return program_roofline(compiled.as_text(), wall)
 
 
 def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 1) -> float:

@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.anonymize import anonymize
+from ..obs import span as obs_span
 from ..core.ops import factorize, groupby_aggregate, mix32, semi_join, unique
 from ..core.plan import lead_fanout, lead_groups, link_groups, unique_lead
 from ..core.queries import (
@@ -70,6 +71,7 @@ __all__ = [
     "analyze_peak_buffer_bytes",
     "distributed_scalar_queries",
     "run_challenge",
+    "timings_from_spans",
 ]
 
 PHASES = ("read", "build", "anonymize", "analyze")
@@ -183,6 +185,46 @@ class ChallengePhaseTimings:
             rows.append(f"{'(compile)':12s}{self.compile_s:12.4f}"
                         f"{'excluded above':>16s}")
         return "\n".join(rows)
+
+
+def timings_from_spans(records) -> ChallengePhaseTimings:
+    """Rebuild :class:`ChallengePhaseTimings` from exported span records.
+
+    The inverse of the span wiring in :func:`run_challenge`: given the
+    record dicts of one telemetry export (``repro.obs.read_jsonl`` output,
+    or ``get_tracer().records()`` directly), find the LAST completed
+    ``challenge`` span group and reassemble the phase walls.  Because both
+    the live dataclass and this replay read the very same span durations —
+    and JSON serializes floats via shortest-round-trip repr — the result is
+    bit-identical to the ``ChallengeRun.timings`` of that run (asserted in
+    tests/test_obs.py and the CI telemetry smoke).
+    """
+    group: Dict[str, dict] = {}
+    last: Optional[Dict[str, dict]] = None
+    for rec in records:
+        if rec.get("kind") != "span":
+            continue
+        if rec.get("parent") == "challenge":
+            group[rec["name"]] = rec
+        elif rec.get("name") == "challenge" and rec.get("parent") is None:
+            last = {**group, "challenge": rec}
+            group = {}
+    if last is None:
+        raise ValueError("no completed 'challenge' span group in records")
+    missing = [p for p in ("read", "build_host", "build_device",
+                           "anonymize", "analyze") if p not in last]
+    if missing:
+        raise ValueError(f"challenge span group incomplete: missing {missing}")
+    dur = lambda name: last[name]["duration_s"]
+    return ChallengePhaseTimings(
+        n_packets=int(last["challenge"]["attrs"]["n_packets"]),
+        read_s=dur("read"),
+        build_s=dur("build_host") + dur("build_device"),
+        anonymize_s=dur("anonymize"),
+        analyze_s=dur("analyze"),
+        fused_s=dur("fused") if "fused" in last else None,
+        compile_s=dur("compile") if "compile" in last else None,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -600,52 +642,59 @@ def run_challenge(
     )
     analyze_fn = jax.jit(lambda t: analyze(t, **kw))
 
-    # ---- read (host I/O) ----
-    t0 = time.perf_counter()
-    capture = read_phase(cfg, workdir)
-    read_s = time.perf_counter() - t0
+    # Phase timing is span-based (obs/trace.py): each wall below is a span's
+    # duration over the same perf_counter clock the old inline timers used,
+    # and ChallengePhaseTimings is now a *derived view* of those spans —
+    # timings_from_spans reconstructs it bit-identically from the exported
+    # JSONL (gated in tests/test_obs.py).
+    with obs_span("challenge", scale=cfg.scale, n_packets=cfg.packets,
+                  fmt=cfg.fmt, fused=cfg.fused, warm=cfg.warm) as sp_chal:
+        # ---- read (host I/O) ----
+        with obs_span("read") as sp_read:
+            capture = read_phase(cfg, workdir)
 
-    t0 = time.perf_counter()
-    src, dst, win, n = build_columns(capture, cfg)
-    host_build_s = time.perf_counter() - t0  # window ids + padding (one-off)
+        with obs_span("build_host") as sp_build_host:
+            src, dst, win, n = build_columns(capture, cfg)
+            # window ids + padding (one-off host work, folded into build_s)
+        sp_chal.attrs["n_packets"] = n  # live rows, not the configured count
 
-    # ---- warm pass: trace + compile every phase so the timed walls below
-    # measure steady-state execution, matching the paper's protocol of
-    # excluding one-time costs (recorded separately as compile_s) ----
-    compile_s = None
-    if cfg.warm:
-        t0 = time.perf_counter()
-        wt, _ = _block(build_fn(src, dst, win, n))
-        _block(analyze_fn(_block(anon_fn(wt, key)).table))
-        compile_s = time.perf_counter() - t0
+        # ---- warm pass: trace + compile every phase so the timed walls
+        # below measure steady-state execution, matching the paper's
+        # protocol of excluding one-time costs (recorded as compile_s) ----
+        sp_compile = None
+        if cfg.warm:
+            with obs_span("compile") as sp_compile:
+                wt, _ = _block(build_fn(src, dst, win, n))
+                _block(analyze_fn(_block(anon_fn(wt, key)).table))
 
-    # ---- build (windows + transfer + A_t group-by) ----
-    t0 = time.perf_counter()
-    table, _links = _block(build_fn(src, dst, win, n))
-    build_s = host_build_s + (time.perf_counter() - t0)
+        # ---- build (windows + transfer + A_t group-by) ----
+        with obs_span("build_device") as sp_build_dev:
+            table, _links = _block(build_fn(src, dst, win, n))
 
-    # ---- anonymize ----
-    t0 = time.perf_counter()
-    anon = _block(anon_fn(table, key))
-    anonymize_s = time.perf_counter() - t0
+        # ---- anonymize ----
+        with obs_span("anonymize") as sp_anon:
+            anon = _block(anon_fn(table, key))
 
-    # ---- analyze ----
-    t0 = time.perf_counter()
-    results = _block(analyze_fn(anon.table))
-    analyze_s = time.perf_counter() - t0
+        # ---- analyze ----
+        with obs_span("analyze") as sp_analyze:
+            results = _block(analyze_fn(anon.table))
 
-    timings = ChallengePhaseTimings(
-        n_packets=n, read_s=read_s, build_s=build_s,
-        anonymize_s=anonymize_s, analyze_s=analyze_s, compile_s=compile_s,
-    )
-
-    if cfg.distributed and len(jax.devices()) > 1:
-        results = dataclasses.replace(
-            results, scalars=distributed_scalar_queries(anon.table)
+        timings = ChallengePhaseTimings(
+            n_packets=n,
+            read_s=sp_read.duration_s,
+            build_s=sp_build_host.duration_s + sp_build_dev.duration_s,
+            anonymize_s=sp_anon.duration_s,
+            analyze_s=sp_analyze.duration_s,
+            compile_s=sp_compile.duration_s if sp_compile is not None else None,
         )
 
-    if cfg.fused:
-        timings.fused_s = _time_fused(cfg, src, dst, win, n, key, kw)
+        if cfg.distributed and len(jax.devices()) > 1:
+            results = dataclasses.replace(
+                results, scalars=distributed_scalar_queries(anon.table)
+            )
+
+        if cfg.fused:
+            timings.fused_s = _time_fused(cfg, src, dst, win, n, key, kw)
 
     anon_columns = None
     if cfg.algorithms:
@@ -674,9 +723,9 @@ def _time_fused(cfg, src, dst, win, n, key, kw) -> float:
     fn = jax.jit(fused, donate_argnums=donate)
     _block(fn(src, dst, win, n, key))  # compile + warm
     src2, dst2, win2 = np.copy(src), np.copy(dst), np.copy(win)
-    t0 = time.perf_counter()
-    _block(fn(src2, dst2, win2, n, key))
-    return time.perf_counter() - t0
+    with obs_span("fused") as sp:
+        _block(fn(src2, dst2, win2, n, key))
+    return sp.duration_s
 
 
 def distributed_scalar_queries(t: Table) -> QueryResults:

@@ -1,8 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
-).strip()
-
 """Perf hillclimb driver (EXPERIMENTS.md §Perf).
 
 Each registered VARIANT rebuilds one of the three hillclimb cells with a
@@ -16,6 +11,23 @@ lives in EXPERIMENTS.md §Perf; this driver produces the numbers.
 import argparse
 import dataclasses as dc
 import json
+import os
+
+
+def enable_host_device_mesh(n_devices: int = 512) -> None:
+    """Opt into the virtual host-device mesh (must run before jax init).
+
+    Importing this module must not mutate the process environment: the old
+    import-time ``os.environ["XLA_FLAGS"]`` assignment reconfigured XLA for
+    every process that merely imported the module — including test runners
+    and notebooks that never wanted 512 virtual devices.  The CLI entry
+    calls this explicitly before anything imports jax; library users who
+    want the mesh do the same.
+    """
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={n_devices} "
+        + os.environ.get("XLA_FLAGS", "")
+    ).strip()
 
 
 def _lm_variant_spec(mod, cfg_tf=None, opt=None, full_attention_only=None,
@@ -128,6 +140,7 @@ def main() -> None:
     ap.add_argument("--out", default="artifacts/perf")
     args = ap.parse_args()
 
+    enable_host_device_mesh()
     from .dryrun import run_spec_cell
 
     os.makedirs(args.out, exist_ok=True)

@@ -13,6 +13,12 @@ under-counts while bodies, see that module.  MODEL_FLOPS is the analytic
 MODEL/HLO ratio flags remat/redundancy waste.
 
     python -m repro.launch.roofline --dir artifacts/dryrun [--mesh single]
+
+:func:`program_roofline` is the *measured* counterpart used by the
+benchmark lanes (DESIGN.md §2.8): given a timed compiled program's HLO
+text and its steady-state wall, it reports achieved bytes/s and flops/s
+against the :data:`BACKEND_PEAKS` ceiling of the active backend — the
+tracked roofline-fraction number of ROADMAP item 5.
 """
 from __future__ import annotations
 
@@ -25,6 +31,80 @@ from typing import Dict, Optional
 PEAK_FLOPS = 197e12        # bf16 per chip (v5e-class)
 HBM_BW = 819e9             # bytes/s per chip
 LINK_BW = 50e9             # bytes/s per ICI link
+
+# Per-backend peak tables for the *measured* roofline (program_roofline):
+# achieved bytes/s and flops/s of an actually-timed compiled program vs the
+# hardware ceiling.  The tpu row mirrors the v5e constants above; gpu is
+# A100-class (the paper's 147x-2185x table spans A100/H100/H200); cpu is a
+# commodity many-core node (~50 GB/s DRAM, ~0.5 TFLOP/s sustained f32) —
+# coarse on purpose: the fraction's job is regression *tracking* (ROADMAP
+# item 5), where only consistency across PRs matters, not absolute truth.
+BACKEND_PEAKS = {
+    "cpu": {"flops": 5e11, "bytes_per_s": 5e10},
+    "gpu": {"flops": 312e12, "bytes_per_s": 2.0e12},
+    "tpu": {"flops": PEAK_FLOPS, "bytes_per_s": HBM_BW},
+}
+
+
+def peak_table(backend: Optional[str] = None) -> Dict[str, float]:
+    """The peak row for ``backend`` (default: the active jax backend)."""
+    if backend is None:
+        import jax
+
+        backend = jax.default_backend()
+    return dict(BACKEND_PEAKS.get(backend, BACKEND_PEAKS["cpu"]),
+                backend=backend)
+
+
+def program_roofline(
+    compiled_text: str, wall_s: float, backend: Optional[str] = None
+) -> Dict[str, object]:
+    """Achieved-vs-peak roofline of one timed compiled program.
+
+    ``compiled_text`` is the post-optimization HLO
+    (``jit(f).lower(*args).compile().as_text()``) and ``wall_s`` the
+    measured steady-state wall seconds per call of that same program.  The
+    numerators come from the loop-trip-exact HLO traffic model
+    (:func:`repro.launch.hloanalysis.analyze_hlo`); dividing by the wall
+    gives achieved bytes/s and flops/s, and dividing those by the
+    :data:`BACKEND_PEAKS` row gives the two roofline fractions.  The
+    reported ``roofline_fraction`` is the max of the two — how close the
+    program runs to the binding ceiling — and ``bottleneck`` names which
+    ceiling binds (the challenge kernels are memory-bound: sort/scatter
+    traffic, almost no dot math, exactly the GraphBLAST profile).
+
+    Fractions can exceed 1.0: the traffic model charges every operand as
+    an HBM round-trip, so a working set that actually lives in cache (CPU
+    quick shapes especially) "achieves" more modeled bytes/s than DRAM
+    peak.  That does not hurt the number's job — regression tracking at
+    fixed shape/backend (ROADMAP item 5), where only the PR-over-PR delta
+    matters.
+    """
+    from .hloanalysis import analyze_hlo
+
+    peaks = peak_table(backend)
+    a = analyze_hlo(compiled_text)
+    hbm = float(a["hbm_bytes"])
+    flops = float(a["dot_flops"])
+    b_s = hbm / wall_s if wall_s > 0 else 0.0
+    f_s = flops / wall_s if wall_s > 0 else 0.0
+    frac_bw = b_s / peaks["bytes_per_s"]
+    frac_fl = f_s / peaks["flops"]
+    return {
+        "backend": peaks["backend"],
+        "wall_s": wall_s,
+        "hbm_bytes": hbm,
+        "dot_flops": flops,
+        "peak_bytes_per_s": peaks["bytes_per_s"],
+        "peak_flops_per_s": peaks["flops"],
+        "achieved_bytes_per_s": b_s,
+        "achieved_flops_per_s": f_s,
+        "frac_peak_bw": frac_bw,
+        "frac_peak_flops": frac_fl,
+        "roofline_fraction": max(frac_bw, frac_fl),
+        "bottleneck": "memory" if frac_bw >= frac_fl else "compute",
+        "peak_buffer_bytes": float(a["peak_buffer_bytes"]),
+    }
 
 _LM_TOKENS = {"train_4k": 256 * 4096, "prefill_32k": 32 * 32768,
               "decode_32k": 128, "long_500k": 1}

@@ -29,7 +29,9 @@ shard_map path over all local devices at query time.
 """
 import argparse
 import dataclasses
+import json
 import os
+import signal
 import sys
 import tempfile
 import time
@@ -116,12 +118,83 @@ def main(argv=None) -> int:
     g.add_argument("--degrade-to-sketch", type=float, default=None,
                    metavar="P", help="pressure that freezes the exact tier")
 
+    g = ap.add_argument_group("observability (repro.obs)")
+    g.add_argument("--metrics-out", default=None, metavar="PATH",
+                   help="stream every span/counter record to PATH as JSONL "
+                        "(live, line-buffered) and append the final metric "
+                        "registry; a Prometheus text dump lands at "
+                        "PATH + '.prom' on exit")
+
     ap.add_argument("--verify", action="store_true",
                     help="re-run uninterrupted/fault-free and require the "
                          "14-query snapshots to match exactly (chaos gate)")
     args = ap.parse_args(argv)
+    return _run_with_telemetry(args, ap)
 
+
+def _run_with_telemetry(args, ap) -> int:
+    """Install the obs sinks around :func:`_serve`, always flush on exit.
+
+    The tracer's per-record sink streams span/counter records to
+    ``--metrics-out`` as they close (header line first, so every record
+    inherits the run's git sha / backend / jax version); SIGUSR1 dumps the
+    live registry as Prometheus text to stderr at any point, and the
+    ``finally`` block writes the same dump to ``PATH + '.prom'`` plus the
+    final metric records into the JSONL — even when the run fails.
+    """
+    from ..obs import get_registry, reset_registry, reset_tracer
+    from ..obs.trace import SCHEMA_VERSION, run_context
+
+    reset_registry()
+    metrics_file = None
+    sink = None
+    if args.metrics_out:
+        ctx = run_context()
+        metrics_file = open(args.metrics_out, "w", buffering=1)
+        metrics_file.write(json.dumps(
+            {"schema_version": SCHEMA_VERSION, "kind": "run",
+             "t_wall": time.time(), **ctx}, sort_keys=True) + "\n")
+
+        def sink(rec):
+            metrics_file.write(json.dumps(
+                {**rec, "git_sha": ctx["git_sha"], "backend": ctx["backend"],
+                 "jax_version": ctx["jax_version"]}, sort_keys=True) + "\n")
+
+    reset_tracer(sink=sink)
+
+    def _dump_prom(signum=None, frame=None):
+        sys.stderr.write(get_registry().to_prometheus())
+        sys.stderr.flush()
+
+    if hasattr(signal, "SIGUSR1"):
+        try:
+            signal.signal(signal.SIGUSR1, _dump_prom)
+        except ValueError:
+            pass  # not the main thread (embedded use): no signal hook
+
+    try:
+        return _serve(args, ap)
+    finally:
+        reg = get_registry()
+        if metrics_file is not None:
+            for rec in reg.to_jsonl_records():
+                metrics_file.write(json.dumps(rec, sort_keys=True) + "\n")
+            metrics_file.close()
+            with open(args.metrics_out + ".prom", "w") as f:
+                f.write(reg.to_prometheus())
+        fold = reg.get("serve_fold_seconds")
+        if fold is not None and fold.count:
+            print(f"[serve] batch latency: p50={fold.quantile(0.5)*1e3:.2f}ms "
+                  f"p99={fold.quantile(0.99)*1e3:.2f}ms "
+                  f"over {fold.count} steady folds"
+                  + (f" (telemetry -> {args.metrics_out})"
+                     if args.metrics_out else ""), flush=True)
+
+
+def _serve(args, ap) -> int:
     from ..challenge.pipeline import window_column
+    from ..obs import get_registry
+    from ..obs import span as obs_span
     from ..data.faults import FaultConfig
     from ..data.plq import read_plq
     from ..stream.engine import (
@@ -193,33 +266,41 @@ def main(argv=None) -> int:
             t0 = time.perf_counter()
             snap = eng.snapshot()
             dt = time.perf_counter() - t0
+            # reliability facts come from the metrics registry, which
+            # snapshot() just refreshed — the one source every surface
+            # (this log line, --metrics-out, the Prometheus dump) shares
+            reg = get_registry()
+            rel = (f"reliable={int(reg.gauge('stream_reliable').value)} "
+                   f"overflow={int(reg.gauge('stream_overflow').value)} "
+                   f"quar={int(reg.gauge('ingest_quarantined').value)}")
             if snap.results is not None:
                 s = snap.results.scalars
                 print(f"[serve] snapshot@batch {i}: "
                       f"packets={snap.n_packets:,} "
                       f"links={int(s.unique_links):,} ips={snap.n_ips:,} "
-                      f"tier={snap.tier} ({dt:.3f}s)", flush=True)
+                      f"tier={snap.tier} {rel} ({dt:.3f}s)", flush=True)
             else:
                 sk = snap.sketch
                 print(f"[serve] snapshot@batch {i}: "
                       f"packets={snap.n_packets:,} "
                       f"links~{int(sk.unique_links):,} tier={snap.tier} "
-                      f"({dt:.3f}s)", flush=True)
+                      f"{rel} ({dt:.3f}s)", flush=True)
 
     # ---- supervised stream phase ----
-    t0 = time.perf_counter()
-    report = run_service(
-        cfg, path, win_full,
-        checkpoint_dir=args.checkpoint_dir,
-        checkpoint_every=args.checkpoint_every,
-        keep=args.keep,
-        faults=faults,
-        degrade=degrade,
-        quarantine_dir=args.quarantine_dir,
-        max_restarts=args.max_restarts,
-        on_batch=on_batch,
-    )
-    wall = time.perf_counter() - t0
+    with obs_span("serve_stream", n_packets=n, batch=batch,
+                  tier=args.tier) as sp_stream:
+        report = run_service(
+            cfg, path, win_full,
+            checkpoint_dir=args.checkpoint_dir,
+            checkpoint_every=args.checkpoint_every,
+            keep=args.keep,
+            faults=faults,
+            degrade=degrade,
+            quarantine_dir=args.quarantine_dir,
+            max_restarts=args.max_restarts,
+            on_batch=on_batch,
+        )
+    wall = sp_stream.duration_s
     timings = report.timings
     print("\n" + format_timings(timings), flush=True)
     ss = steady_state(timings)
@@ -236,9 +317,9 @@ def main(argv=None) -> int:
     print(f"[serve] health: {_health_line(report.health)}", flush=True)
 
     # ---- query phase ----
-    t0 = time.perf_counter()
-    snap = report.snapshot(distributed=args.distributed)
-    t_q = time.perf_counter() - t0
+    with obs_span("serve_query", distributed=args.distributed) as sp_q:
+        snap = report.snapshot(distributed=args.distributed)
+    t_q = sp_q.duration_s
     if snap.results is not None:
         d = {k: int(v)
              for k, v in sorted(snap.results.scalars.as_dict().items())}

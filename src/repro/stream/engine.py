@@ -56,6 +56,7 @@ from ..data.faults import IngestHealth
 from ..data.pipeline import Prefetcher
 from ..data.plq import read_plq_chunks
 from ..kernels.ops import windowed_histogram
+from ..obs import get_registry
 from .state import StreamState, init_state
 
 __all__ = [
@@ -687,6 +688,11 @@ class StreamEngine:
         self.cfg = dataclasses.replace(self.cfg, tier=to_tier)
         self.health.degraded_to = to_tier
         self.health.degraded_at_batch = at_batch
+        reg = get_registry()
+        reg.counter("stream_degrade_total", "tier degradations applied").inc()
+        reg.gauge("stream_tier",
+                  "active tier (0=exact 1=both 2=sketch)"
+                  ).set(_TIER_ORDER[to_tier])
 
     # -- ingest --------------------------------------------------------------
     def ingest(self, src, dst, win, n_valid: Optional[int] = None) -> None:
@@ -711,6 +717,11 @@ class StreamEngine:
                 self._sketch_state, src, dst, n_valid
             )
         self.n_ingested += 1
+        reg = get_registry()
+        reg.counter("stream_batches_ingested_total",
+                    "micro-batches folded into the stream state").inc()
+        reg.counter("stream_packets_ingested_total",
+                    "live packet rows folded").inc(int(n_valid))
 
     # -- queries -------------------------------------------------------------
     def snapshot(self, distributed: bool = False) -> StreamSnapshot:
@@ -720,6 +731,7 @@ class StreamEngine:
         ``repro.dist`` shard_map path over all local devices (scalar suite
         only; raises on exchange overflow per the repo contract).
         """
+        t0 = time.perf_counter()
         state = self._state
         results = None
         if self.cfg.exact_enabled:
@@ -738,7 +750,7 @@ class StreamEngine:
             else int(self._sketch_state.n_packets)
         n_batches = int(state.n_batches) if exact \
             else int(self._sketch_state.n_batches)
-        return StreamSnapshot(
+        snap = StreamSnapshot(
             results=results,
             n_packets=n_packets,
             n_batches=n_batches,
@@ -749,6 +761,34 @@ class StreamEngine:
             tier=self.cfg.tier,
             health=dataclasses.replace(self.health),
         )
+        # snapshot time is the one spot that already forces a device sync,
+        # so mirroring engine + ingest-health facts into the registry here
+        # costs no extra block_until_ready on the hot ingest path
+        reg = get_registry()
+        reg.histogram("stream_snapshot_seconds",
+                      "wall seconds per snapshot() query pass"
+                      ).observe(time.perf_counter() - t0)
+        reg.gauge("stream_packets", "packets folded so far").set(n_packets)
+        reg.gauge("stream_batches", "batches folded so far").set(n_batches)
+        if exact:
+            reg.gauge("stream_links", "distinct links held").set(snap.n_links)
+            reg.gauge("stream_ips", "dictionary entries held").set(snap.n_ips)
+            reg.gauge("stream_overflow",
+                      "rows dropped past capacity (0 == exact)"
+                      ).set(snap.overflow)
+        reg.gauge("stream_reliable",
+                  "1 iff no overflow and no lost batches"
+                  ).set(int(snap.reliable))
+        h = self.health
+        reg.gauge("ingest_duplicates_dropped", "").set(h.duplicates_dropped)
+        reg.gauge("ingest_reordered_buffered", "").set(h.reordered_buffered)
+        reg.gauge("ingest_quarantined", "").set(h.quarantined)
+        reg.gauge("ingest_io_retries", "").set(h.io_retries)
+        reg.gauge("ingest_lost_batches", "").set(h.lost_batches)
+        reg.gauge("ingest_batches_replayed", "").set(h.batches_replayed)
+        reg.gauge("ingest_crashes_recovered", "").set(h.crashes_recovered)
+        reg.gauge("ingest_checkpoints_committed", "").set(h.checkpoints_committed)
+        return snap
 
     def algorithms(self, source: int = 0):
         """BFS/CC/PageRank/triangles over everything streamed so far.
@@ -828,6 +868,11 @@ def stream_plq(
             n_packets=n, prep_s=t1 - t_start, transfer_s=t2 - t1,
             update_s=t3 - t2, total_s=t3 - t_start, compile=(i == 0),
         ))
+        if i > 0:  # steady-state only: the compile batch would skew p99
+            get_registry().histogram(
+                "stream_batch_seconds",
+                "steady-state wall seconds per ingested micro-batch",
+            ).observe(t3 - t_start)
         if on_batch is not None:
             on_batch(i, engine)
     engine.block()

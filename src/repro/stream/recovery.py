@@ -58,6 +58,7 @@ from ..data.faults import (
 )
 from ..data.pipeline import Prefetcher
 from ..data.plq import plq_info, read_plq_group
+from ..obs import get_registry
 from ..train import checkpoint as ckpt
 from .engine import (
     _TIER_ORDER,
@@ -187,7 +188,15 @@ class StreamCheckpointer:
         path = ckpt.save_checkpoint(
             self.directory, int(watermark), tree, extra=extra, keep=self.keep
         )
-        self.save_walls.append(time.perf_counter() - t0)
+        wall = time.perf_counter() - t0
+        self.save_walls.append(wall)
+        reg = get_registry()
+        reg.histogram("checkpoint_save_seconds",
+                      "wall seconds per committed checkpoint").observe(wall)
+        reg.counter("serve_commits_total",
+                    "watermark advances committed durably").inc()
+        reg.gauge("serve_watermark", "committed batch-sequence watermark"
+                  ).set(int(watermark))
         return path
 
     # -- restore -------------------------------------------------------------
@@ -218,7 +227,13 @@ class StreamCheckpointer:
             tree, _ = ckpt.restore_checkpoint(
                 self.directory, step, self._template(extra["has_sketch"])
             )
-            self.restore_walls.append(time.perf_counter() - t0)
+            wall = time.perf_counter() - t0
+            self.restore_walls.append(wall)
+            reg = get_registry()
+            reg.histogram("checkpoint_restore_seconds",
+                          "wall seconds per successful restore").observe(wall)
+            reg.counter("serve_restores_total",
+                        "checkpoint restores performed").inc()
             return RestorePoint(
                 watermark=int(extra["watermark"]),
                 tier=extra["tier"],
@@ -387,10 +402,19 @@ def _serve_one_life(
             n_packets=n, prep_s=t1 - t0, transfer_s=t2 - t1,
             update_s=t3 - t2, total_s=t3 - t0, compile=first_fold,
         ))
+        if not first_fold:  # steady-state only: compile would skew p99
+            get_registry().histogram(
+                "serve_fold_seconds",
+                "steady-state wall seconds per folded batch (all lives)",
+            ).observe(t3 - t0)
         first_fold = False
         if seq < replay_until:
             engine.health.batches_replayed += 1
             replay_wall += t3 - t0
+            get_registry().counter(
+                "serve_batches_replayed_total",
+                "previously-folded batches re-folded after a restore",
+            ).inc()
         if degrade is not None and (seq + 1) % degrade.check_every == 0:
             degrade.apply(engine)
         if on_batch is not None:
@@ -524,6 +548,9 @@ def run_service(
             break
         except SimulatedCrash as crash:
             restarts += 1
+            get_registry().counter(
+                "serve_restarts_total", "crash->restore cycles survived"
+            ).inc()
             if restarts > max_restarts:
                 raise
             crash_armed = False  # the chaos crash fires once per service

@@ -1,0 +1,330 @@
+"""Telemetry layer battery (DESIGN.md §2.8): span nesting + exception
+safety, fixed-bucket histogram quantile math against hand-computed
+interpolation, registry lifecycle, JSONL schema round-trip, and the
+bit-identity contract — ``ChallengePhaseTimings`` derived from exported
+spans must equal the live dataclass exactly, field for field."""
+import dataclasses
+import json
+import math
+import threading
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.challenge.pipeline import (
+    ChallengeConfig,
+    run_challenge,
+    timings_from_spans,
+)
+from repro.obs import (
+    DEFAULT_LATENCY_BUCKETS,
+    SCHEMA_VERSION,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    Tracer,
+    export_jsonl,
+    get_registry,
+    get_tracer,
+    read_jsonl,
+    reset_registry,
+    reset_tracer,
+    run_context,
+    span,
+)
+from repro.obs.trace import _jsonable
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(autouse=True)
+def _clean_telemetry():
+    """Every test starts from a fresh global tracer + registry."""
+    reset_tracer()
+    reset_registry()
+    yield
+    reset_tracer()
+    reset_registry()
+
+
+# --------------------------------------------------------------- spans
+
+class TestSpans:
+    def test_nesting_parent_depth_path(self):
+        with span("outer") as sp_o:
+            with span("inner", k=1) as sp_i:
+                with span("leaf") as sp_l:
+                    pass
+        assert sp_o.parent is None and sp_o.depth == 0
+        assert sp_i.parent == "outer" and sp_i.depth == 1
+        assert sp_i.path == "outer/inner"
+        assert sp_l.parent == "outer/inner" and sp_l.depth == 2
+        recs = get_tracer().records()
+        # children close before parents
+        assert [r["name"] for r in recs] == ["leaf", "inner", "outer"]
+        assert all(r["schema_version"] == SCHEMA_VERSION for r in recs)
+        assert all(r["duration_s"] >= 0 for r in recs)
+
+    def test_exception_safety(self):
+        """The record is emitted with the error noted; nothing swallowed."""
+        with pytest.raises(RuntimeError, match="boom"):
+            with span("doomed", n=7):
+                raise RuntimeError("boom")
+        (rec,) = get_tracer().records()
+        assert rec["name"] == "doomed"
+        assert rec["error"] == "RuntimeError"
+        assert rec["duration_s"] is not None
+        assert rec["attrs"] == {"n": 7}
+        # the stack unwound: a new span is top-level again
+        with span("after") as sp:
+            pass
+        assert sp.parent is None
+
+    def test_attrs_mutable_until_close(self):
+        """run_challenge patches n_packets after build; records must see it."""
+        with span("s", n=0) as sp:
+            sp.attrs["n"] = 42
+        (rec,) = get_tracer().records()
+        assert rec["attrs"]["n"] == 42
+
+    def test_ring_bounded(self):
+        tr = Tracer(capacity=8)
+        for i in range(32):
+            with tr.span(f"s{i}"):
+                pass
+        recs = tr.records()
+        assert len(recs) == 8
+        assert recs[0]["name"] == "s24" and recs[-1]["name"] == "s31"
+
+    def test_sink_streams_and_broken_sink_is_swallowed(self):
+        seen = []
+
+        def bad_sink(rec):
+            seen.append(rec["name"])
+            raise OSError("disk full")
+
+        tr = reset_tracer(sink=bad_sink)
+        with tr.span("a"):
+            pass
+        tr.counter_event("evt", 3)
+        assert seen == ["a", "evt"]
+        assert len(tr.records()) == 2  # ring unaffected by the sink failing
+
+    def test_thread_local_stacks(self):
+        """A worker thread's spans do not adopt the main thread's parent."""
+        tr = get_tracer()
+        parents = {}
+
+        def worker():
+            with tr.span("worker_span") as sp:
+                parents["worker"] = sp.parent
+
+        with tr.span("main_span"):
+            t = threading.Thread(target=worker)
+            t.start()
+            t.join()
+        assert parents["worker"] is None
+
+    def test_jsonable_coercions(self):
+        assert _jsonable(np.int64(5)) == 5
+        assert _jsonable(jnp.asarray(2.5)) == 2.5
+        assert _jsonable(jnp.arange(3)) == [0, 1, 2]
+        assert isinstance(_jsonable(jnp.zeros(1000)), str)   # too big: repr
+        assert _jsonable({"k": (np.int32(1), None)}) == {"k": [1, None]}
+        # everything it returns must actually serialize
+        json.dumps(_jsonable({"a": jnp.ones((2, 2)), "b": object()}))
+
+
+# --------------------------------------------------------------- metrics
+
+class TestHistogram:
+    def test_quantiles_of_known_distribution(self):
+        """1..100 into decade buckets: every quantile is exact by hand."""
+        h = Histogram("t", buckets=[float(b) for b in range(10, 101, 10)])
+        for v in range(1, 101):
+            h.observe(v)
+        assert h.count == 100 and h.sum == 5050
+        # rank q*100 lands in bucket (lower,upper]; 10 samples per bucket
+        assert h.quantile(0.50) == pytest.approx(50.0)
+        assert h.quantile(0.99) == pytest.approx(99.0)
+        assert h.quantile(0.05) == pytest.approx(5.0)
+        assert h.quantile(1.0) == pytest.approx(100.0)
+
+    def test_interpolation_inside_one_bucket(self):
+        # counts: [1, 2, 1, 1] over bounds [1,2,4,8] — p50 rank 2.5 lands
+        # in (1,2] with prev_cum=1, c=2: 1 + 1*(2.5-1)/2 = 1.75
+        h = Histogram("t", buckets=[1.0, 2.0, 4.0, 8.0])
+        for v in (0.5, 1.5, 1.5, 3.0, 7.0):
+            h.observe(v)
+        assert h.quantile(0.5) == pytest.approx(1.75)
+        # p99 rank 4.95 in (4,8]: 4 + 4*(4.95-4)/1 = 7.8
+        assert h.quantile(0.99) == pytest.approx(7.8)
+
+    def test_overflow_bucket_clamps_to_last_bound(self):
+        h = Histogram("t", buckets=[1.0, 2.0])
+        h.observe(100.0)
+        assert h.quantile(0.99) == 2.0
+        d = h.as_dict()
+        assert d["bucket_counts"] == [0, 0, 1]
+
+    def test_empty_is_nan_and_bad_q_raises(self):
+        h = Histogram("t", buckets=[1.0])
+        assert math.isnan(h.quantile(0.5))
+        with pytest.raises(ValueError):
+            h.quantile(1.5)
+        with pytest.raises(ValueError):
+            Histogram("bad", buckets=[2.0, 1.0])
+
+    def test_default_buckets_span_fold_to_restore(self):
+        b = DEFAULT_LATENCY_BUCKETS
+        assert b[0] == pytest.approx(1e-5)
+        assert 50.0 < b[-1] <= 60.0
+        assert list(b) == sorted(b)
+        # 4 per decade: consecutive ratio = 10^(1/4)
+        assert b[4] / b[0] == pytest.approx(10.0)
+
+
+class TestRegistry:
+    def test_counter_monotonic(self):
+        c = get_registry().counter("x_total")
+        c.inc()
+        c.inc(5)
+        assert c.value == 6
+        with pytest.raises(ValueError):
+            c.inc(-1)
+
+    def test_gauge(self):
+        g = get_registry().gauge("level")
+        g.set(10)
+        g.inc(2)
+        g.dec()
+        assert g.value == 11
+
+    def test_get_or_create_and_kind_mismatch(self):
+        reg = get_registry()
+        assert reg.counter("a_total") is reg.counter("a_total")
+        with pytest.raises(TypeError, match="already registered"):
+            reg.gauge("a_total")
+        assert reg.get("missing") is None
+
+    def test_reset_registry_gives_clean_slate(self):
+        get_registry().counter("x_total").inc(3)
+        assert "x_total" in get_registry().names()
+        reset_registry()
+        assert get_registry().names() == []
+        # the wired layers call get_registry() per use, so they see the new one
+        assert get_registry().counter("x_total").value == 0
+
+    def test_prometheus_text(self):
+        reg = MetricsRegistry()
+        reg.counter("req_total", help="requests").inc(4)
+        h = reg.histogram("lat_seconds", buckets=[1.0, 2.0])
+        h.observe(0.5)
+        h.observe(5.0)
+        text = reg.to_prometheus()
+        assert "# HELP req_total requests" in text
+        assert "# TYPE req_total counter" in text
+        assert "req_total 4" in text
+        assert 'lat_seconds_bucket{le="1.0"} 1' in text
+        assert 'lat_seconds_bucket{le="2.0"} 1' in text  # cumulative
+        assert 'lat_seconds_bucket{le="+Inf"} 2' in text
+        assert "lat_seconds_count 2" in text
+
+
+# --------------------------------------------------------------- JSONL
+
+class TestJsonl:
+    def test_round_trip_schema(self, tmp_path):
+        with span("phase", scale=10):
+            get_tracer().counter_event("dropped", 2, reason="overflow")
+        get_registry().counter("x_total").inc(7)
+        path = str(tmp_path / "t.jsonl")
+        n = export_jsonl(path)
+        with open(path, "a") as f:
+            for rec in get_registry().to_jsonl_records():
+                f.write(json.dumps(rec, sort_keys=True) + "\n")
+        recs = read_jsonl(path)
+        assert len(recs) == n + 1
+        kinds = [r["kind"] for r in recs]
+        assert kinds == ["run", "counter", "span", "metric"]
+        ctx = run_context()
+        assert recs[0]["git_sha"] == ctx["git_sha"]
+        assert recs[0]["backend"] == ctx["backend"]
+        # every non-header record is self-describing (re-stamped)
+        for r in recs[1:]:
+            assert r["schema_version"] == SCHEMA_VERSION
+            assert r["git_sha"] == ctx["git_sha"]
+        metric = recs[3]
+        assert metric["name"] == "x_total" and metric["metric"]["value"] == 7
+
+    def test_float_bit_identity_through_json(self):
+        """Shortest-repr round-trip: durations survive JSON exactly."""
+        with span("s"):
+            pass
+        (rec,) = get_tracer().records()
+        back = json.loads(json.dumps(rec))
+        assert back["duration_s"] == rec["duration_s"]
+        assert back["t_mono"] == rec["t_mono"]
+
+    def test_read_jsonl_accepts_raw_text(self):
+        text = '{"kind": "run"}\n\n{"kind": "span", "name": "x"}\n'
+        recs = read_jsonl(text)
+        assert [r["kind"] for r in recs] == ["run", "span"]
+
+
+# ----------------------------------------------- challenge bit-identity
+
+class TestChallengeTimings:
+    def test_timings_from_spans_bit_identical(self, tmp_path):
+        """The acceptance criterion: the derived view IS the legacy view.
+
+        Both read the very same ``perf_counter`` span durations, and JSON
+        floats round-trip via shortest repr — so every field must match
+        with ``==``, not approx.
+        """
+        cfg = ChallengeConfig(scale=8, n_packets=256, warm=True, fused=True,
+                              workdir=str(tmp_path))
+        run = run_challenge(cfg)
+        path = str(tmp_path / "trace.jsonl")
+        export_jsonl(path)
+        derived = timings_from_spans(read_jsonl(path))
+        assert dataclasses.asdict(derived) == dataclasses.asdict(run.timings)
+
+    def test_timings_from_spans_uses_last_run(self, tmp_path):
+        cfg = ChallengeConfig(scale=8, n_packets=128, warm=False,
+                              fused=False, workdir=str(tmp_path))
+        first = run_challenge(cfg)
+        second = run_challenge(cfg)
+        derived = timings_from_spans(get_tracer().records())
+        assert dataclasses.asdict(derived) == dataclasses.asdict(second.timings)
+        assert derived.read_s != first.timings.read_s
+
+    def test_timings_from_spans_rejects_incomplete(self):
+        with pytest.raises(ValueError, match="no completed"):
+            timings_from_spans([])
+        # a challenge span with a missing phase child is an error, not a zero
+        with span("challenge", n_packets=1):
+            with span("read"):
+                pass
+        with pytest.raises(ValueError, match="missing"):
+            timings_from_spans(get_tracer().records())
+
+
+# --------------------------------------------------------------- hygiene
+
+def test_perf_import_does_not_mutate_env(monkeypatch):
+    """Importing launch.perf must not reconfigure XLA (the old import-time
+    XLA_FLAGS assignment hit every process that merely imported it)."""
+    import importlib
+    import os
+
+    import repro.launch.perf as perf
+
+    monkeypatch.delenv("XLA_FLAGS", raising=False)
+    importlib.reload(perf)
+    assert "XLA_FLAGS" not in os.environ
+    perf.enable_host_device_mesh(4)
+    assert os.environ["XLA_FLAGS"] == "--xla_force_host_platform_device_count=4"
