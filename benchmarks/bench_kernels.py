@@ -1,38 +1,129 @@
-"""Beyond-paper: Pallas kernel paths vs their XLA oracles (CPU interpret
-timing is NOT indicative — the structural numbers that matter on TPU are in
-EXPERIMENTS.md §Roofline; here we verify dispatch + record call overhead).
+"""Kernel autotune lane: sweep Pallas block configs, persist + verify them.
+
+Runs the :mod:`repro.kernels.autotune` sweep for each tunable kernel
+(histogram, segreduce, CMS scatter-max) at a representative shape, writes
+the winners into the backend's on-disk table (``configs/autotune/
+<backend>.json``), re-reads them through :func:`best_config` (the cache
+round-trip every later call site takes), and records a roofline fraction
+for the *chosen* config.  ``BENCH_kernels.json`` carries the full sweep
+evidence — per-candidate medians, chosen vs default, tie flag, cache hit —
+in the manifest format shared by every lane (DESIGN.md §2.8).
+
+CPU interpret timing is NOT indicative of TPU; the win this lane gates on
+CI is "chosen <= default on *this* backend", which holds by construction
+(the default is always a candidate and wins ties) and is re-asserted here
+against the persisted table.
+
+    python -m benchmarks.bench_kernels [--quick] [--n N] [--json PATH]
 """
 from __future__ import annotations
+
+import argparse
+import json
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import attention, histogram, segment_reduce
-from repro.kernels.ref import ref_attention, ref_histogram, ref_segment_matmul
+from repro.kernels import autotune
+from repro.kernels.histogram import histogram_pallas
+from repro.kernels.segreduce import segment_max_pallas
+from repro.kernels.sketch import cms_update_pallas
 
-from .common import emit, time_fn
+from .common import emit, kernel_roofline, run_manifest
+
+# lane shapes: (kernel, n rows/proposals, num bins/segments/width, dtype)
+_LANES = [
+    ("histogram", 1 << 17, 2048, "float32"),
+    ("segreduce", 1 << 17, 1024, "float32"),
+    ("cms", 1 << 16, 2048, "int32"),
+]
+_QUICK_N = 1 << 14
 
 
-def run(iters: int = 3) -> None:
+def _chosen_runner(kernel: str, n: int, num_out: int, dtype: str,
+                   config, interpret: bool):
+    """(fn, args) running the kernel under ``config`` for the roofline."""
     rng = np.random.default_rng(0)
+    if kernel == "histogram":
+        ids = jnp.asarray(rng.integers(0, num_out, n).astype(np.int32))
+        w = jnp.ones((n,), jnp.float32)
+        return (lambda i, w_: histogram_pallas(
+            i, num_out, w_, interpret=interpret, **config), (ids, w))
+    if kernel == "segreduce":
+        seg = jnp.asarray(rng.integers(0, num_out, n).astype(np.int32))
+        v = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+        return (lambda v_, s: segment_max_pallas(
+            v_, s, num_out, interpret=interpret, **config), (v, seg))
+    if kernel == "cms":
+        depth = 4
+        counts = jnp.zeros((depth, num_out), jnp.dtype(dtype))
+        ids = jnp.asarray(
+            rng.integers(0, num_out, (depth, n)).astype(np.int32))
+        props = jnp.ones((n,), jnp.dtype(dtype))
+        return (lambda c, i, p: cms_update_pallas(
+            c, i, p, interpret=interpret, **config), (counts, ids, props))
+    raise ValueError(kernel)
 
-    ids = jnp.asarray(rng.integers(0, 2048, 1 << 18).astype(np.int32))
-    f_x = jax.jit(lambda i: ref_histogram(i, 2048))
-    emit("kernel/histogram_xla", time_fn(f_x, ids, iters=iters), "n=262144 bins=2048")
 
-    x = jnp.asarray(rng.standard_normal((1 << 15, 128)).astype(np.float32))
-    seg = jnp.asarray(rng.integers(0, 1024, 1 << 15).astype(np.int32))
-    f_s = jax.jit(lambda x, s: ref_segment_matmul(x, s, 1024))
-    emit("kernel/segment_reduce_xla", time_fn(f_s, x, seg, iters=iters),
-         "n=32768 d=128 segs=1024")
-
-    q = jnp.asarray(rng.standard_normal((1, 8, 1024, 128)).astype(np.float32))
-    k = jnp.asarray(rng.standard_normal((1, 2, 1024, 128)).astype(np.float32))
-    f_a = jax.jit(lambda q, k: ref_attention(q, k, k, causal=True))
-    emit("kernel/attention_xla", time_fn(f_a, q, k, iters=iters),
-         "B=1 Hq=8 Hkv=2 L=1024 D=128 (GQA causal)")
+def run(n: int | None = None, iters: int = 3, json_path: str | None = None,
+        quick: bool = False) -> dict:
+    backend = jax.default_backend()
+    interpret = backend == "cpu"
+    rows = {}
+    roofline = {}
+    for kernel, lane_n, num_out, dtype in _LANES:
+        kn = n if n is not None else (_QUICK_N if quick else lane_n)
+        entry = autotune.sweep_and_save(
+            kernel, kn, num_out, dtype, backend=backend, iters=iters
+        )
+        # cache round-trip: the persisted table must reproduce the choice
+        # through the exact lookup every kernel call site performs
+        autotune.invalidate_cache()
+        cached = autotune.best_config(kernel, kn, num_out, dtype, backend)
+        cache_hit = cached == entry["config"]
+        row = {
+            "kernel": kernel,
+            "n": kn,
+            "num_out": num_out,
+            "dtype": dtype,
+            "key": autotune.config_key(kernel, kn, num_out, dtype),
+            "candidates": entry["candidates"],
+            "chosen": entry["config"],
+            "default": entry["candidates"][0]["config"],
+            "best_us": entry["us"],
+            "default_us": entry["default_us"],
+            "tie": entry["config"] == entry["candidates"][0]["config"],
+            "cache_hit": cache_hit,
+        }
+        rows[kernel] = row
+        fn, args = _chosen_runner(
+            kernel, autotune.shape_bucket(kn), autotune.shape_bucket(num_out),
+            dtype, entry["config"], interpret,
+        )
+        roofline[kernel] = kernel_roofline(fn, *args, iters=iters)
+        speedup = row["default_us"] / row["best_us"] if row["best_us"] else 1.0
+        emit(
+            f"kernel/{kernel}_autotuned", row["best_us"] * 1e-6,
+            f"n={kn} out={num_out} chosen={row['chosen']} "
+            f"default_us={row['default_us']:.1f} speedup={speedup:.2f}x "
+            f"{'tie' if row['tie'] else 'win'} cache_hit={cache_hit}",
+        )
+    payload = {"manifest": run_manifest(), "rows": rows, "roofline": roofline}
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {json_path}", flush=True)
+    return payload
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--n", type=int, default=None,
+                    help="override rows/proposals for every lane")
+    ap.add_argument("--quick", action="store_true",
+                    help=f"small shapes (n={_QUICK_N}) for CI")
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--json", default=None, help="write BENCH_kernels.json")
+    args = ap.parse_args()
+    run(n=args.n, iters=args.iters, json_path=args.json, quick=args.quick)

@@ -21,6 +21,8 @@ def run_manifest() -> Dict:
     Host-side by construction — the timestamp is taken here, outside any
     jit, and passed into the payload as data.
     """
+    from repro.launch.roofline import hardware_fingerprint
+
     ctx = run_context()
     return {
         "schema_version": SCHEMA_VERSION,
@@ -30,6 +32,7 @@ def run_manifest() -> Dict:
         "jax_version": ctx["jax_version"],
         "python": ctx["python"],
         "timestamp": time.time(),
+        "fingerprint": hardware_fingerprint(),
     }
 
 

@@ -6,7 +6,7 @@ Emits ``name,us_per_call,derived`` CSV rows:
   graphblas/*    paper Fig. 2     (vs scipy-CSR GraphBLAS-style reference)
   algorithms/*   Graph Challenge  (BFS/CC/PageRank/triangles, oracle-gated)
   anonymize/*    paper §IV        (shuffle vs HashGraph-style vs numpy)
-  kernel/*       beyond-paper     (kernel-path dispatch)
+  kernel/*       beyond-paper     (autotune sweep: chosen vs default config)
   distributed/*  beyond-paper     (shard_map pipeline at 8 shards)
   endtoend/*     paper pipeline   (per-phase + fused full-workload throughput)
   sketch/*       beyond-paper     (bounded-memory tier: wall + error-vs-bound)
@@ -28,9 +28,14 @@ The serve section writes ``--serve-json`` (default ``BENCH_serve.json``):
 checkpoint/restore/replay walls with the recovered-vs-uninterrupted
 bit-identity flag (DESIGN.md §2.7).
 
+The kernel section writes ``--kernels-json`` (default
+``BENCH_kernels.json``): the autotune sweep evidence — per-candidate
+medians, chosen vs default config, cache-hit flag, roofline fraction of
+the chosen config (DESIGN.md §2.9).
+
 ``python -m benchmarks.run [--quick] [--n N] [--only PREFIX] [--ab]
 [--bench-json PATH] [--graphblas-json PATH] [--algorithms-json PATH]
-[--sketches-json PATH] [--serve-json PATH]``
+[--sketches-json PATH] [--serve-json PATH] [--kernels-json PATH]``
 """
 from __future__ import annotations
 
@@ -60,6 +65,9 @@ def main() -> None:
     ap.add_argument("--serve-json", default="BENCH_serve.json",
                     help="machine-readable serve recovery-overhead rows "
                          "(empty string disables)")
+    ap.add_argument("--kernels-json", default="BENCH_kernels.json",
+                    help="machine-readable kernel autotune-sweep rows "
+                         "(empty string disables)")
     args = ap.parse_args()
     n = (1 << 17) if args.quick else args.n
 
@@ -76,7 +84,8 @@ def main() -> None:
         ("algorithms", lambda: bench_algorithms.run(
             n=n, json_path=args.algorithms_json or None)),
         ("anonymize", lambda: bench_anonymize.run(n=n)),
-        ("kernel", bench_kernels.run),
+        ("kernel", lambda: bench_kernels.run(
+            quick=args.quick, json_path=args.kernels_json or None)),
         ("distributed", bench_distributed.run),
         ("endtoend", lambda: bench_endtoend.run(n=n)),
         ("sketch", lambda: bench_sketches.run(

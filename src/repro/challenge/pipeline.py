@@ -103,6 +103,7 @@ class ChallengeConfig:
     fmt: str = "plq"                     # 'plq' | 'pcaplite'
     backend: str = "auto"                # histogram kernel dispatch
     fused: bool = False                  # also time the one-program path
+    fused_epilogue: bool = False         # fused kernel epilogues in analyze
     distributed: bool = False            # scalar suite via shard_map
     algorithms: bool = False             # BFS/CC/PageRank/triangles pass
     bfs_source: int = 0                  # BFS source (anonymized vertex id)
@@ -467,6 +468,7 @@ def analyze(
     backend: str = "auto",
     use_plan: bool = True,
     windowed_method: str = "csr",
+    fused_epilogue: bool = False,
     algorithms: bool = False,
     bfs_source: int = 0,
 ) -> ChallengeResults:
@@ -486,6 +488,13 @@ def analyze(
     partially dedupe — as the A/B baseline; all paths return bit-identical
     results.
 
+    ``fused_epilogue=True`` routes the analyze phase's two remaining
+    scatter/gather chains — the windowed suite's per-window slice select
+    and the top-k pre-mask — through the kernel lane's fused gate /
+    valid-mask epilogues (DESIGN.md §2.9).  Bit-identical to the unfused
+    path (which stays the A/B baseline), same 3-sort budget; requires the
+    CSR windowed method.
+
     ``algorithms=True`` adds the iterative pass (DESIGN.md §2.5): BFS
     levels from ``bfs_source``, connected components, PageRank and
     triangle counts over the anonymized traffic graph.  The pass runs off
@@ -498,6 +507,11 @@ def analyze(
             raise ValueError(
                 "algorithms=True requires the plan path (use_plan=True): "
                 "the pass is defined off the plan's zero-sort CSR pair"
+            )
+        if fused_epilogue:
+            raise ValueError(
+                "fused_epilogue=True requires the plan path (use_plan=True):"
+                " the epilogues fuse into the plan's shared reductions"
             )
         return _analyze_naive(
             t, n_windows=n_windows, ip_bins=ip_bins, k=k, backend=backend
@@ -537,9 +551,12 @@ def analyze(
         destination_fanin=fanin,
         unique_sources=unique_lead(plan_src),
         unique_destinations=unique_lead(plan_dst),
-        top=top_links_from_plan(plan_src, k, links),
+        top=top_links_from_plan(
+            plan_src, k, links, fused=fused_epilogue, backend=backend
+        ),
         windowed=windowed_queries(t, 1, n_windows, ts_col="win", t0=0,
-                                  plans=plans, method=windowed_method),
+                                  plans=plans, method=windowed_method,
+                                  fused=fused_epilogue, backend=backend),
         window_activity=_window_activity(t, n_windows, ip_bins, backend),
         window_ip_overlap=cross_window_ip_overlap(
             t, n_windows, ips=ips,
@@ -629,8 +646,8 @@ def run_challenge(
     workdir = cfg.workdir or tempfile.mkdtemp(prefix="netsense_challenge_")
     os.makedirs(workdir, exist_ok=True)
     kw = dict(n_windows=cfg.n_windows, ip_bins=cfg.ip_bins, k=cfg.top_k,
-              backend=cfg.backend, algorithms=cfg.algorithms,
-              bfs_source=cfg.bfs_source)
+              backend=cfg.backend, fused_epilogue=cfg.fused_epilogue,
+              algorithms=cfg.algorithms, bfs_source=cfg.bfs_source)
 
     def _build(s, d, wn, nv):
         table = build_table(s, d, wn, nv)  # build once; A_t groups the same

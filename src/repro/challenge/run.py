@@ -311,6 +311,16 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     choices=["auto", "xla", "pallas", "interpret"])
     ap.add_argument("--fused", action="store_true",
                     help="also time build+anonymize+analyze as one program")
+    ap.add_argument("--fused-epilogue", action="store_true",
+                    help="fuse the analyze windowed/top-k scatter chains "
+                         "into the kernel epilogues (bit-identical; the "
+                         "unfused path stays the A/B baseline)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="sweep Pallas block configs at this run's kernel "
+                         "shapes first and persist the winners "
+                         "(configs/autotune/<backend>.json); without it, "
+                         "cached tables are used when present, defaults "
+                         "otherwise")
     ap.add_argument("--distributed", action="store_true",
                     help="scalar suite via shard_map over local devices")
     ap.add_argument("--algorithms", action="store_true",
@@ -343,11 +353,28 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             ip_bins=args.ip_bins, top_k=args.top_k, method=args.method,
             rounds=args.rounds, seed=args.seed, fmt=args.format,
             backend=args.backend, fused=args.fused,
+            fused_epilogue=args.fused_epilogue,
             distributed=args.distributed, algorithms=args.algorithms,
             bfs_source=args.bfs_source, workdir=args.workdir,
         )
     except ValueError as e:
         ap.error(str(e))
+    if args.autotune:
+        # sweep at THIS run's kernel shapes so the persisted table has hot
+        # entries for every dispatch the pipeline is about to make; later
+        # runs (and the jitted pipeline below) read the table through
+        # best_config without re-sweeping
+        from repro.kernels import autotune as _autotune
+
+        cap = cfg.table_capacity
+        for kernel, kn, num_out in (
+            ("histogram", cap, cfg.n_windows * cfg.ip_bins),
+            ("segreduce", cap, cap + 1),
+        ):
+            entry = _autotune.sweep_and_save(kernel, kn, num_out, "float32")
+            print(f"autotune {kernel}: n={kn} out={num_out} -> "
+                  f"{entry['config']} ({entry['us']:.0f}us vs default "
+                  f"{entry['default_us']:.0f}us)")
     print(f"anonymized network sensing challenge: {cfg.packets:,} packets, "
           f"{cfg.n_windows} windows, fmt={cfg.fmt}, method={cfg.method}")
     run = run_challenge(cfg)

@@ -221,7 +221,8 @@ def top_links(t: Table, k: int) -> TopLinks:
 
 
 def top_links_from_plan(
-    plan: SortedEdges, k: int, links: Optional[GroupResult] = None
+    plan: SortedEdges, k: int, links: Optional[GroupResult] = None,
+    *, fused: bool = False, backend: str = "auto",
 ) -> TopLinks:
     """:func:`top_links` off a shared plan, sort-free.
 
@@ -229,10 +230,30 @@ def top_links_from_plan(
     identical k heaviest links (packet sums are non-negative, so its dtype-
     min caveat never binds) without spending a sort on an already-grouped
     buffer.
+
+    ``fused=True`` folds the top-k pre-mask (``where(link_mask, packets,
+    int32_min)``) into the segmented-reduction kernel's ``valid_mask``/
+    ``retire`` epilogue (DESIGN.md §2.9): the per-link packet sums come
+    straight off the plan with dead slots already retired, and the known
+    live count (``plan.n_links``) replaces the mask recount.  Bit-identical
+    to the unfused path — same per-slot contributions, same retire value,
+    same first-max tie rule.
     """
     g = link_groups(plan) if links is None else links
     k = clamp_k(k, plan.capacity)
-    pk, idx, n_live = argmax_top_k(g.aggs["packets"], k, g.mask())
+    if fused:
+        from ..kernels.ops import segmented_reduce
+
+        cap = plan.capacity
+        imin = int(jnp.iinfo(jnp.int32).min)
+        pk_buf = segmented_reduce(
+            plan.w, plan.seg, cap + 1, op="sum",
+            valid_mask=jnp.arange(cap + 1, dtype=jnp.int32) < plan.n_links,
+            retire=imin, out_dtype=jnp.int32, backend=backend,
+        )[:cap]
+        pk, idx, n_live = argmax_top_k(pk_buf, k, n_valid=plan.n_links)
+    else:
+        pk, idx, n_live = argmax_top_k(g.aggs["packets"], k, g.mask())
     keep = jnp.arange(k, dtype=jnp.int32) < n_live
     return TopLinks(
         src=jnp.where(keep, g.keys[0][idx], 0),

@@ -405,16 +405,25 @@ _ADD_IDENTS = {"plus": 0.0, "max": -jnp.inf, "min": jnp.inf}
 
 def _semiring_reduce(
     prod: jnp.ndarray, seg: jnp.ndarray, num_segments: int, add: str,
-    backend: str,
+    backend: str, mask: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Dispatch the ⊕ reduction.  The min monoid rides the max kernel by
-    negation (min(x) = -max(-x), identity ``+inf``) — no third kernel."""
+    negation (min(x) = -max(-x), identity ``+inf``) — no third kernel.
+
+    ``mask`` rides the kernel's fused ``valid_mask``/``retire`` epilogue
+    (DESIGN.md §2.9): masked-out segments take the ⊕ identity inside the
+    reduction's final grid step instead of a separate ``where`` pass.  For
+    min the retire value is negated along with everything else (``-inf``
+    into the max kernel surfaces as ``+inf``).
+    """
     if add == "min":
         return -segmented_reduce(
-            -prod, seg, num_segments, op="max", backend=backend
+            -prod, seg, num_segments, op="max", backend=backend,
+            valid_mask=mask, retire=None if mask is None else -_ADD_IDENTS["min"],
         )
     return segmented_reduce(
-        prod, seg, num_segments, op=_ADD_OPS[add], backend=backend
+        prod, seg, num_segments, op=_ADD_OPS[add], backend=backend,
+        valid_mask=mask, retire=None if mask is None else _ADD_IDENTS[add],
     )
 
 
@@ -457,10 +466,7 @@ def mxv(
     safe = jnp.clip(csr.col_keys.astype(jnp.int32), 0, n_x - 1)
     prod = _products(csr.vals, x[safe].astype(jnp.float32), mul)
     seg = jnp.where(ok, csr.entry_rows(), -1)
-    y = _semiring_reduce(prod, seg, csr.row_capacity, add, backend)
-    if mask is not None:
-        y = jnp.where(mask, y, jnp.float32(_ADD_IDENTS[add]))
-    return y
+    return _semiring_reduce(prod, seg, csr.row_capacity, add, backend, mask)
 
 
 def vxm(
@@ -491,10 +497,7 @@ def vxm(
     safe = jnp.clip(rows, 0, x.shape[0] - 1)
     prod = _products(csr.vals, x[safe].astype(jnp.float32), mul)
     seg = jnp.where(ok, csr.col_keys.astype(jnp.int32), -1)
-    y = _semiring_reduce(prod, seg, num_cols, add, backend)
-    if mask is not None:
-        y = jnp.where(mask, y, jnp.float32(_ADD_IDENTS[add]))
-    return y
+    return _semiring_reduce(prod, seg, num_cols, add, backend, mask)
 
 
 # ---------------------------------------------------------------------------

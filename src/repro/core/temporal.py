@@ -33,6 +33,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..kernels.ops import segmented_reduce
 from .ops import groupby_aggregate
 from .plan import SortedEdges, sorted_edges
 from .table import Table
@@ -57,7 +58,8 @@ def window_ids(ts: jnp.ndarray, window_len: int, t0=None) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 def _side_stats_csr(
-    plan: SortedEdges, win: jnp.ndarray, n_windows: int
+    plan: SortedEdges, win: jnp.ndarray, n_windows: int,
+    fused: bool = False, backend: str = "auto",
 ) -> Dict[str, jnp.ndarray]:
     """Per-window stats of one plan side off per-window CSR segments.
 
@@ -67,6 +69,16 @@ def _side_stats_csr(
     pointers and a sliced value/pattern vector.  A ``lax.scan`` walks the
     static window axis so only ONE window's O(capacity) value buffers are
     live at a time (the dense-grid path materialises all of them at once).
+
+    ``fused=True`` folds the per-window slice select (``where(in_w, ...)``)
+    into the segmented-reduction kernel's gate epilogue (DESIGN.md §2.9):
+    the window id rides as the (traced) gate value, so each scan step is
+    one kernel dispatch per reduction with no materialised masked copies.
+    Bit-identical to the unfused path: a row is gated out exactly when the
+    unfused path would scatter a zero (``s_win == w`` implies validity —
+    invalid and padding rows carry ``s_win == n_windows``), and the total
+    ``1^T A_w 1`` is re-derived as ``sum(link_pk)`` — the same int32
+    additions reassociated, exact under two's-complement wraparound.
     """
     cap = plan.capacity
     valid = plan.valid_rows()
@@ -81,17 +93,31 @@ def _side_stats_csr(
     link2row = plan.link_to_k0()[:cap]
 
     def one_window(carry, w):
-        in_w = s_win == w
-        rows_w = jnp.where(in_w, ones, 0)
-        pk_w = jnp.where(in_w, w_live, 0)
-        # A_w's entry values on the shared skeleton: per-link row counts
-        # (pattern) and packet sums (values) restricted to window w
-        link_cnt = jax.ops.segment_sum(rows_w, plan.seg, num_segments=cap + 1)[:cap]
-        link_pk = jax.ops.segment_sum(pk_w, plan.seg, num_segments=cap + 1)[:cap]
+        if fused:
+            def gated_sum(vals, seg):
+                return segmented_reduce(
+                    vals, seg, cap + 1, op="sum", gate_ids=s_win,
+                    gate_value=w, out_dtype=jnp.int32, backend=backend,
+                )[:cap]
+
+            link_cnt = gated_sum(ones, plan.seg)
+            link_pk = gated_sum(w_live, plan.seg)
+            row_cnt = gated_sum(ones, plan.k0_seg)
+            row_pk = gated_sum(w_live, plan.k0_seg)
+            pk_total = jnp.sum(link_pk)
+        else:
+            in_w = s_win == w
+            rows_w = jnp.where(in_w, ones, 0)
+            pk_w = jnp.where(in_w, w_live, 0)
+            # A_w's entry values on the shared skeleton: per-link row counts
+            # (pattern) and packet sums (values) restricted to window w
+            link_cnt = jax.ops.segment_sum(rows_w, plan.seg, num_segments=cap + 1)[:cap]
+            link_pk = jax.ops.segment_sum(pk_w, plan.seg, num_segments=cap + 1)[:cap]
+            # row-level reductions of A_w (per leading endpoint)
+            row_cnt = jax.ops.segment_sum(rows_w, plan.k0_seg, num_segments=cap + 1)[:cap]
+            row_pk = jax.ops.segment_sum(pk_w, plan.k0_seg, num_segments=cap + 1)[:cap]
+            pk_total = jnp.sum(pk_w)
         present = link_cnt > 0
-        # row-level reductions of A_w (per leading endpoint)
-        row_cnt = jax.ops.segment_sum(rows_w, plan.k0_seg, num_segments=cap + 1)[:cap]
-        row_pk = jax.ops.segment_sum(pk_w, plan.k0_seg, num_segments=cap + 1)[:cap]
         # |A_w|_0·1 — degrees of the per-window pattern, reduced over rows
         fan = jax.ops.segment_sum(
             present.astype(jnp.int32), link2row, num_segments=cap + 1
@@ -102,7 +128,7 @@ def _side_stats_csr(
             jnp.sum(row_cnt > 0).astype(jnp.int32),    # |A_w 1|_0 support
             jnp.max(row_pk),                           # max(A_w 1)
             jnp.max(fan),                              # max(|A_w|_0 1)
-            jnp.sum(pk_w),                             # 1^T A_w 1
+            pk_total,                                  # 1^T A_w 1
         )
 
     _, (uniq_links, max_link_pk, n_uniq, max_pk, max_fan, packets) = jax.lax.scan(
@@ -169,18 +195,28 @@ def windowed_suite_from_plans(
     win: jnp.ndarray,
     n_windows: int,
     method: str = "csr",
+    fused: bool = False,
+    backend: str = "auto",
 ) -> Dict[str, jnp.ndarray]:
     """All scalar challenge statistics per window, off the shared plan pair.
 
     ``method="csr"`` (default) scans per-window CSR segments — O(nnz) peak
     memory; ``method="grid"`` is the dense-scatter A/B baseline —
     O(n_windows × capacity) peak memory, bit-identical results.
+
+    ``fused=True`` (CSR only) routes the per-window reductions through the
+    kernel lane's gate epilogue — see :func:`_side_stats_csr`.
     """
     if method not in ("csr", "grid"):
         raise ValueError(f"unknown windowed method {method!r}")
-    stats = _side_stats_csr if method == "csr" else _side_stats_grid
-    s = stats(plan_src, win, n_windows)
-    d = stats(plan_dst, win, n_windows)
+    if fused and method != "csr":
+        raise ValueError("fused windowed suite requires method='csr'")
+    if method == "csr":
+        s = _side_stats_csr(plan_src, win, n_windows, fused, backend)
+        d = _side_stats_csr(plan_dst, win, n_windows, fused, backend)
+    else:
+        s = _side_stats_grid(plan_src, win, n_windows)
+        d = _side_stats_grid(plan_dst, win, n_windows)
     return {
         "valid_packets": s["valid_packets"],
         "unique_links": s["unique_links"],
@@ -202,6 +238,8 @@ def windowed_queries(
     t0=None,
     plans: Optional[Tuple[SortedEdges, SortedEdges]] = None,
     method: str = "csr",
+    fused: bool = False,
+    backend: str = "auto",
 ) -> Dict[str, jnp.ndarray]:
     """All scalar challenge statistics per time window.
 
@@ -218,6 +256,10 @@ def windowed_queries(
         statistics cost zero additional sorts.
       method: ``"csr"`` (sparse default, O(nnz) memory) or ``"grid"`` (the
         dense-scatter A/B baseline) — see :func:`windowed_suite_from_plans`.
+      fused: route the per-window reductions through the kernel gate
+        epilogue (CSR only; bit-identical, DESIGN.md §2.9).
+      backend: kernel backend for the fused reductions (``"auto"``/
+        ``"xla"``/``"pallas"``/``"interpret"``).
 
     Returns a dict of (n_windows,) arrays:
       valid_packets, unique_links, max_link_packets, n_unique_sources,
@@ -232,7 +274,8 @@ def windowed_queries(
             sorted_edges(t["dst"], t["src"], weights=w, n_valid=t.n_valid),
         )
     return windowed_suite_from_plans(
-        plans[0], plans[1], win, n_windows, method=method
+        plans[0], plans[1], win, n_windows, method=method, fused=fused,
+        backend=backend,
     )
 
 

@@ -1,0 +1,343 @@
+"""Shape-keyed Pallas block-config autotuner (ISSUE 10 tentpole).
+
+The Pallas kernels in this package are tiled loops whose block shapes
+(rows per inner step × output-tile width) trade VMEM residency against
+grid-loop overhead, and the best point moves with the backend and the
+problem shape.  This module sweeps a small candidate lattice under *real
+compiled execution* — ``jax.jit`` + device sync, median wall time — and
+persists the winner in a versioned on-disk table so later runs (and other
+processes) reuse the choice without re-sweeping.
+
+Design contract (DESIGN.md §2.9):
+
+* **Lookup never sweeps.**  :func:`best_config` is a pure, fast,
+  trace-time-safe table lookup; a cold run with no table (or a table from
+  different hardware) silently gets the deterministic defaults from
+  :mod:`repro.kernels.defaults`.  Sweeping only happens when something
+  explicitly asks for it (``challenge.run --autotune``, the
+  ``benchmarks/bench_kernels.py`` lane, or :func:`sweep` directly).
+* **Win-or-tie by construction.**  The default config is always the
+  first candidate and ties break toward it, so a swept table can never be
+  slower than the fallback it replaces.
+* **Shape bucketing.**  Keys use the next power of two of each dimension
+  (``histogram|n131072|s2048|float32``), so one sweep covers the whole
+  bucket and key cardinality stays bounded.
+* **Versioned, atomic, overridable.**  Tables carry a schema version and
+  a hardware fingerprint; writes go through ``tmp + os.replace``; the
+  directory comes from ``$REPRO_AUTOTUNE_DIR`` (default
+  ``<repo>/configs/autotune``) and ``REPRO_AUTOTUNE=0`` disables lookup
+  entirely (defaults-only, for A/B runs).
+
+Kernel names and their swept knobs:
+
+==========  =============================  =====================================
+name        config keys                    entry point
+==========  =============================  =====================================
+histogram   block_rows, block_bins         :func:`histogram.histogram_pallas`
+segreduce   block_rows, block_segs         :func:`segreduce.segment_max_pallas`
+cms         block_props, block_width       :func:`sketch.cms_update_pallas`
+==========  =============================  =====================================
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .defaults import DEFAULTS
+
+__all__ = [
+    "TABLE_VERSION",
+    "shape_bucket",
+    "config_key",
+    "table_path",
+    "load_table",
+    "save_table",
+    "invalidate_cache",
+    "best_config",
+    "sweep",
+    "sweep_and_save",
+]
+
+TABLE_VERSION = 1
+
+# Candidate lattice: row blocks × output-tile widths.  The default config
+# is prepended by the sweep, so the lattice only needs to cover plausible
+# alternatives.  The VMEM guard drops tiles whose one-hot working set
+# (rows × out elements) exceeds ~4 MB fp32 — past that the sequential-grid
+# formulation stops fitting comfortably next to its operands.
+_ROW_CHOICES: Tuple[int, ...] = (256, 512, 1024, 2048)
+_OUT_CHOICES: Tuple[int, ...] = (128, 256, 512, 1024)
+_VMEM_GUARD_ELEMS = 1 << 20
+
+_CONFIG_KEYS: Dict[str, Tuple[str, str]] = {
+    "histogram": ("block_rows", "block_bins"),
+    "segreduce": ("block_rows", "block_segs"),
+    "cms": ("block_props", "block_width"),
+}
+
+# module-level table cache: path -> (mtime_ns, parsed table)
+_CACHE: Dict[str, Tuple[int, dict]] = {}
+
+
+def shape_bucket(n: int) -> int:
+    """Next power of two >= n (minimum 1) — the key-space quantizer."""
+    n = max(int(n), 1)
+    return 1 << (n - 1).bit_length()
+
+
+def config_key(kernel: str, n: int, num_out: int, dtype: str) -> str:
+    """Table key for one (kernel, padded-shape bucket, dtype) cell."""
+    if kernel not in _CONFIG_KEYS:
+        raise ValueError(f"unknown autotune kernel {kernel!r}")
+    return f"{kernel}|n{shape_bucket(n)}|s{shape_bucket(num_out)}|{dtype}"
+
+
+def _backend() -> str:
+    import jax
+
+    return jax.default_backend()
+
+
+def table_path(backend: Optional[str] = None) -> Path:
+    """On-disk location of the per-backend config table."""
+    if backend is None:
+        backend = _backend()
+    base = os.environ.get("REPRO_AUTOTUNE_DIR")
+    if base:
+        root = Path(base)
+    else:
+        # src/repro/kernels/autotune.py -> repo root is parents[3]
+        root = Path(__file__).resolve().parents[3] / "configs" / "autotune"
+    return root / f"{backend}.json"
+
+
+def invalidate_cache() -> None:
+    """Drop the in-process table cache (tests / after external writes)."""
+    _CACHE.clear()
+
+
+def load_table(backend: Optional[str] = None) -> Optional[dict]:
+    """Parse (and cache, keyed by mtime) the backend's config table.
+
+    Returns None when the file is missing, unreadable, or carries a
+    different schema version — every failure mode degrades to defaults.
+    """
+    path = table_path(backend)
+    try:
+        mtime = path.stat().st_mtime_ns
+    except OSError:
+        return None
+    cached = _CACHE.get(str(path))
+    if cached is not None and cached[0] == mtime:
+        table = cached[1]
+    else:
+        try:
+            table = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError):
+            return None
+        _CACHE[str(path)] = (mtime, table)
+    # validate after the cache too: save_table seeds the cache verbatim
+    if not isinstance(table, dict) or table.get("version") != TABLE_VERSION:
+        return None
+    return table
+
+
+def save_table(table: dict, backend: Optional[str] = None) -> Path:
+    """Atomically write the table (tmp + rename) and refresh the cache."""
+    path = table_path(backend)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    tmp = path.with_suffix(".json.tmp")
+    tmp.write_text(json.dumps(table, indent=2, sort_keys=True) + "\n")
+    os.replace(tmp, path)
+    _CACHE[str(path)] = (path.stat().st_mtime_ns, table)
+    return path
+
+
+def _valid_config(kernel: str, config) -> bool:
+    keys = _CONFIG_KEYS[kernel]
+    return (
+        isinstance(config, dict)
+        and set(config) == set(keys)
+        and all(isinstance(config[k], int) and config[k] > 0 for k in keys)
+    )
+
+
+def best_config(kernel: str, n: int, num_out: int, dtype: str,
+                backend: Optional[str] = None) -> Dict[str, int]:
+    """The block config to use for this call site — table hit or defaults.
+
+    Pure lookup: never sweeps, never blocks, safe to call at trace time.
+    ``REPRO_AUTOTUNE=0`` forces the defaults tier (A/B baseline runs).
+    Malformed table entries fall back to defaults too.
+    """
+    default = dict(DEFAULTS[kernel])
+    if os.environ.get("REPRO_AUTOTUNE", "1") == "0":
+        return default
+    table = load_table(backend)
+    if table is None:
+        return default
+    entry = table.get("entries", {}).get(config_key(kernel, n, num_out, dtype))
+    if not isinstance(entry, dict):
+        return default
+    config = entry.get("config")
+    if not _valid_config(kernel, config):
+        return default
+    return dict(config)
+
+
+# ---------------------------------------------------------------------------
+# sweep machinery
+# ---------------------------------------------------------------------------
+
+
+def candidate_configs(kernel: str) -> List[Dict[str, int]]:
+    """Default config first, then the guarded lattice (defaults deduped)."""
+    row_key, out_key = _CONFIG_KEYS[kernel]
+    default = dict(DEFAULTS[kernel])
+    out: List[Dict[str, int]] = [default]
+    for rows in _ROW_CHOICES:
+        for width in _OUT_CHOICES:
+            if rows * width > _VMEM_GUARD_ELEMS:
+                continue
+            cfg = {row_key: rows, out_key: width}
+            if cfg != default:
+                out.append(cfg)
+    return out
+
+
+def _make_runner(kernel: str, n: int, num_out: int, dtype: str,
+                 interpret: bool):
+    """Build (fn(config) -> jitted zero-arg thunk) at the bucketed shape."""
+    import jax
+    import jax.numpy as jnp
+
+    from .histogram import histogram_pallas
+    from .segreduce import segment_max_pallas
+    from .sketch import cms_update_pallas
+
+    key = jax.random.PRNGKey(0)
+    if kernel == "histogram":
+        ids = jax.random.randint(key, (n,), 0, num_out, jnp.int32)
+        w = jnp.ones((n,), jnp.float32)
+
+        def make(config):
+            def thunk():
+                return histogram_pallas(
+                    ids, num_out, w, interpret=interpret, **config
+                )
+
+            return thunk
+
+    elif kernel == "segreduce":
+        seg = jax.random.randint(key, (n,), 0, num_out, jnp.int32)
+        vals = jax.random.uniform(key, (n,), jnp.float32)
+
+        def make(config):
+            def thunk():
+                return segment_max_pallas(
+                    vals, seg, num_out, interpret=interpret, **config
+                )
+
+            return thunk
+
+    elif kernel == "cms":
+        depth = 4
+        counts = jnp.zeros((depth, num_out), jnp.dtype(dtype))
+        col_ids = jax.random.randint(key, (depth, n), 0, num_out, jnp.int32)
+        props = jnp.ones((n,), jnp.dtype(dtype))
+
+        def make(config):
+            def thunk():
+                return cms_update_pallas(
+                    counts, col_ids, props, interpret=interpret, **config
+                )
+
+            return thunk
+
+    else:
+        raise ValueError(f"unknown autotune kernel {kernel!r}")
+    return make
+
+
+def _time_thunk(thunk, iters: int) -> float:
+    """Median wall seconds of the jitted thunk (1 warmup = compile)."""
+    import jax
+
+    fn = jax.jit(thunk)
+    jax.block_until_ready(fn())  # compile + warmup
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def sweep(kernel: str, n: int, num_out: int, dtype: str = "float32", *,
+          backend: Optional[str] = None, iters: int = 5,
+          candidates: Optional[Sequence[Dict[str, int]]] = None) -> dict:
+    """Sweep the candidate lattice at the bucketed shape; return the entry.
+
+    Real compiled execution on the active backend (``interpret=True`` on
+    CPU, where Pallas has no native lowering).  The returned dict is the
+    table-entry payload::
+
+        {"config": {...}, "us": ..., "default_us": ..., "shape": [n_b, s_b],
+         "iters": ..., "candidates": [{"config": ..., "us": ...}, ...]}
+
+    The default config is measured first and wins ties, so
+    ``us <= default_us`` always holds.
+    """
+    if backend is None:
+        backend = _backend()
+    n_b, s_b = shape_bucket(n), shape_bucket(num_out)
+    interpret = backend == "cpu"
+    make = _make_runner(kernel, n_b, s_b, dtype, interpret)
+    cands = list(candidates) if candidates is not None else candidate_configs(kernel)
+    default = dict(DEFAULTS[kernel])
+    if not cands or cands[0] != default:
+        cands.insert(0, default)
+    measured = []
+    for cfg in cands:
+        us = _time_thunk(make(cfg), iters) * 1e6
+        measured.append({"config": dict(cfg), "us": us})
+    best = min(measured, key=lambda m: m["us"])  # first (default) wins ties
+    return {
+        "config": best["config"],
+        "us": best["us"],
+        "default_us": measured[0]["us"],
+        "shape": [n_b, s_b],
+        "iters": iters,
+        "candidates": measured,
+    }
+
+
+def sweep_and_save(kernel: str, n: int, num_out: int, dtype: str = "float32",
+                   *, backend: Optional[str] = None, iters: int = 5,
+                   candidates: Optional[Sequence[Dict[str, int]]] = None,
+                   ) -> dict:
+    """Sweep one shape bucket and merge the result into the on-disk table."""
+    from repro.launch.roofline import hardware_fingerprint
+
+    if backend is None:
+        backend = _backend()
+    entry = sweep(kernel, n, num_out, dtype, backend=backend, iters=iters,
+                  candidates=candidates)
+    table = load_table(backend) or {
+        "version": TABLE_VERSION,
+        "backend": backend,
+        "fingerprint": hardware_fingerprint(backend),
+        "entries": {},
+    }
+    # drop the per-candidate detail from the persisted entry — the table
+    # stores decisions, the bench JSON stores evidence
+    persisted = {k: v for k, v in entry.items() if k != "candidates"}
+    table.setdefault("entries", {})[
+        config_key(kernel, n, num_out, dtype)
+    ] = persisted
+    save_table(table, backend)
+    return entry

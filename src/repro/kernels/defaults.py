@@ -1,0 +1,52 @@
+"""One home for the Pallas block-shape defaults (ISSUE 10 satellite).
+
+Every Pallas kernel in this package tiles the same way — a row/proposal
+block axis that revisits an output tile of bins/segments/cells resident in
+VMEM (DESIGN.md §2.1) — and each module used to carry its own copy of the
+same ``DEFAULT_BLOCK_*`` constants.  They now live here, in one table the
+autotuner (:mod:`repro.kernels.autotune`) uses as the deterministic
+fallback tier: a cold run with no cached best-config table gets exactly
+these shapes, so autotuning can never *block* a run, only improve it.
+
+The values are the DESIGN.md §2 napkin-math defaults: (1024, 512) tiles
+are ≈2.3 MB fp32 of VMEM working set per grid step — well under the
+~16 MB v5e budget, big enough to amortize the grid loop.  The kernel
+modules re-export their historical names (``DEFAULT_BLOCK_ROWS`` etc.)
+from here for backward compatibility.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+__all__ = [
+    "DEFAULT_BLOCK_ROWS",
+    "DEFAULT_BLOCK_SEGS",
+    "DEFAULT_BLOCK_BINS",
+    "DEFAULT_BLOCK_PROPS",
+    "DEFAULT_BLOCK_WIDTH",
+    "DEFAULTS",
+]
+
+DEFAULT_BLOCK_ROWS = 1024    # histogram / segreduce inner row blocks
+DEFAULT_BLOCK_SEGS = 512     # segreduce output segment tile
+DEFAULT_BLOCK_BINS = 512     # histogram output bin tile
+DEFAULT_BLOCK_PROPS = 1024   # CMS proposal blocks (sketch scatter-max)
+DEFAULT_BLOCK_WIDTH = 512    # CMS width tile
+
+# Per-kernel default configs, keyed by the autotuner's kernel names; the
+# dict VALUES are the exact kwargs of the matching ``*_pallas`` entry
+# point, so a config can be splatted straight into the call.
+DEFAULTS: Dict[str, Dict[str, int]] = {
+    "histogram": {
+        "block_rows": DEFAULT_BLOCK_ROWS,
+        "block_bins": DEFAULT_BLOCK_BINS,
+    },
+    "segreduce": {
+        "block_rows": DEFAULT_BLOCK_ROWS,
+        "block_segs": DEFAULT_BLOCK_SEGS,
+    },
+    "cms": {
+        "block_props": DEFAULT_BLOCK_PROPS,
+        "block_width": DEFAULT_BLOCK_WIDTH,
+    },
+}

@@ -21,7 +21,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from . import ref
+from . import autotune, ref
 from .flash_attention import flash_attention, flash_attention_pallas
 from .histogram import histogram_pallas
 from .segment_matmul import segment_matmul_pallas
@@ -42,12 +42,25 @@ __all__ = [
 _MATMUL_SEGMENT_LIMIT = 4096
 
 
+def _resolve(backend: str, num_out: int) -> str:
+    """Map ``"auto"`` to a concrete backend by the §2.2 size heuristic."""
+    if backend != "auto":
+        return backend
+    return "pallas" if (
+        jax.default_backend() == "tpu" and num_out <= _MATMUL_SEGMENT_LIMIT
+    ) else "xla"
+
+
 def histogram(
     ids: jnp.ndarray,
     num_bins: int,
     weights: Optional[jnp.ndarray] = None,
     *,
     init: Optional[jnp.ndarray] = None,
+    gate_ids: Optional[jnp.ndarray] = None,
+    gate_value=None,
+    valid_mask: Optional[jnp.ndarray] = None,
+    retire: float = 0.0,
     backend: str = "auto",
 ) -> jnp.ndarray:
     """Weighted histogram with an optional accumulate path.
@@ -57,16 +70,28 @@ def histogram(
     mergeable-state primitive of the streaming engine (DESIGN.md §6).  On
     the Pallas path the accumulator seeds the output tile in VMEM instead
     of zeros, so accumulation costs no extra dispatch.
+
+    Fused epilogues (DESIGN.md §2.9): ``gate_ids``/``gate_value`` drop
+    rows whose gate id differs from the (possibly traced) gate value;
+    ``valid_mask`` + static ``retire`` overwrite masked-out bins *after*
+    the reduction and ``init`` fold.  Both lower to extra jnp ops on the
+    XLA path and to in-kernel epilogues on the Pallas path.
     """
-    if backend == "auto":
-        backend = "pallas" if (
-            jax.default_backend() == "tpu" and num_bins <= _MATMUL_SEGMENT_LIMIT
-        ) else "xla"
+    backend = _resolve(backend, num_bins)
     if backend == "xla":
-        out = ref.ref_histogram(ids, num_bins, weights)
-        return out if init is None else init.astype(jnp.float32) + out
+        out = ref.ref_histogram(
+            ids, num_bins, weights, gate_ids=gate_ids, gate_value=gate_value
+        )
+        if init is not None:
+            out = init.astype(jnp.float32) + out
+        if valid_mask is not None:
+            out = jnp.where(valid_mask, out, jnp.float32(retire))
+        return out
+    cfg = autotune.best_config("histogram", ids.shape[0], num_bins, "float32")
     return histogram_pallas(
-        ids, num_bins, weights, init=init, interpret=(backend == "interpret")
+        ids, num_bins, weights, init=init, gate_ids=gate_ids,
+        gate_value=gate_value, valid_mask=valid_mask, retire=retire,
+        interpret=(backend == "interpret"), **cfg,
     )
 
 
@@ -112,6 +137,11 @@ def segmented_reduce(
     *,
     op: str = "sum",
     init: Optional[jnp.ndarray] = None,
+    gate_ids: Optional[jnp.ndarray] = None,
+    gate_value=None,
+    valid_mask: Optional[jnp.ndarray] = None,
+    retire=None,
+    out_dtype=None,
     backend: str = "auto",
 ) -> jnp.ndarray:
     """1-D segmented reduction under a plus or max monoid — the reduction
@@ -122,21 +152,52 @@ def segmented_reduce(
     kernel of :mod:`repro.kernels.segreduce` — MXU accumulation is additive,
     so the max monoid needs its own kernel.  Empty segments yield the monoid
     identity (0 / ``-inf``); ``init`` folds a running accumulator in the
-    same dispatch.  Returns float32 of shape ``(num_segments,)``.
+    same dispatch.  Returns float32 of shape ``(num_segments,)``, or
+    ``out_dtype`` when given (``"sum"`` only — native accumulation on the
+    XLA path, exact for int32 sums; the Pallas path accumulates in float32
+    and casts, exact below 2^24).
+
+    Fused epilogues (DESIGN.md §2.9): ``gate_ids``/``gate_value`` drop
+    non-matching rows (the windowed suite's per-window select);
+    ``valid_mask`` + static ``retire`` (default: the monoid identity)
+    overwrite masked-out segments last (the top-k pre-mask / mxv mask).
     """
     if op == "sum":
-        return histogram(seg_ids, num_segments, vals, init=init, backend=backend)
+        backend = _resolve(backend, num_segments)
+        r = 0.0 if retire is None else retire
+        if backend == "xla":
+            return ref.ref_segmented_reduce(
+                vals, seg_ids, num_segments, op, init, gate_ids=gate_ids,
+                gate_value=gate_value, valid_mask=valid_mask, retire=r,
+                out_dtype=out_dtype,
+            )
+        cfg = autotune.best_config(
+            "histogram", seg_ids.shape[0], num_segments, "float32"
+        )
+        out = histogram_pallas(
+            seg_ids, num_segments, vals, init=init, gate_ids=gate_ids,
+            gate_value=gate_value, valid_mask=valid_mask, retire=float(r),
+            interpret=(backend == "interpret"), **cfg,
+        )
+        return out if out_dtype is None else out.astype(out_dtype)
     if op != "max":
         raise ValueError(f"unknown segmented-reduce op {op!r}")
-    if backend == "auto":
-        backend = "pallas" if (
-            jax.default_backend() == "tpu" and num_segments <= _MATMUL_SEGMENT_LIMIT
-        ) else "xla"
+    if out_dtype is not None:
+        raise ValueError("out_dtype is only supported for op='sum'")
+    backend = _resolve(backend, num_segments)
+    r = float("-inf") if retire is None else retire
     if backend == "xla":
-        return ref.ref_segmented_reduce(vals, seg_ids, num_segments, op, init)
+        return ref.ref_segmented_reduce(
+            vals, seg_ids, num_segments, op, init, gate_ids=gate_ids,
+            gate_value=gate_value, valid_mask=valid_mask, retire=r,
+        )
+    cfg = autotune.best_config(
+        "segreduce", seg_ids.shape[0], num_segments, "float32"
+    )
     return segment_max_pallas(
-        vals, seg_ids, num_segments, init=init,
-        interpret=(backend == "interpret"),
+        vals, seg_ids, num_segments, init=init, gate_ids=gate_ids,
+        gate_value=gate_value, valid_mask=valid_mask, retire=float(r),
+        interpret=(backend == "interpret"), **cfg,
     )
 
 
@@ -155,15 +216,14 @@ def cms_update(
     ``col_ids`` — one dispatch folds a whole batch into the sketch, the
     same accumulate idiom as the histogram/segreduce ``init=`` paths.
     """
-    if backend == "auto":
-        backend = "pallas" if (
-            jax.default_backend() == "tpu"
-            and counts.shape[1] <= _MATMUL_SEGMENT_LIMIT
-        ) else "xla"
+    backend = _resolve(backend, counts.shape[1])
     if backend == "xla":
         return ref.ref_cms_update(counts, col_ids, proposals)
+    cfg = autotune.best_config(
+        "cms", col_ids.shape[1], counts.shape[1], str(counts.dtype)
+    )
     return cms_update_pallas(
-        counts, col_ids, proposals, interpret=(backend == "interpret")
+        counts, col_ids, proposals, interpret=(backend == "interpret"), **cfg
     )
 
 

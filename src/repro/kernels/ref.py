@@ -36,19 +36,33 @@ def ref_histogram(
     ids: jnp.ndarray,
     num_bins: int,
     weights: Optional[jnp.ndarray] = None,
+    *,
+    gate_ids: Optional[jnp.ndarray] = None,
+    gate_value=None,
+    valid_mask: Optional[jnp.ndarray] = None,
+    retire: float = 0.0,
 ) -> jnp.ndarray:
     """Weighted histogram: out[b] = sum_{i: ids[i]==b} weights[i].
 
     Out-of-range ids (e.g. the jaxdf padding id == capacity) are dropped.
+    Fusion-epilogue semantics (the kernel contract, DESIGN.md §2.9):
+    ``gate_ids``/``gate_value`` additionally drop rows with
+    ``gate_ids[i] != gate_value``; ``valid_mask`` (shape ``(num_bins,)``)
+    overwrites masked-out bins with ``retire`` after the reduction.
     """
     if weights is None:
         weights = jnp.ones(ids.shape, jnp.float32)
     ok = (ids >= 0) & (ids < num_bins)
-    return jax.ops.segment_sum(
+    if gate_ids is not None:
+        ok = ok & (gate_ids == gate_value)
+    out = jax.ops.segment_sum(
         jnp.where(ok, weights, 0).astype(jnp.float32),
         jnp.where(ok, ids, num_bins),
         num_segments=num_bins + 1,
     )[:num_bins]
+    if valid_mask is not None:
+        out = jnp.where(valid_mask, out, jnp.float32(retire))
+    return out
 
 
 def ref_segmented_reduce(
@@ -57,6 +71,12 @@ def ref_segmented_reduce(
     num_segments: int,
     op: str = "sum",
     init: Optional[jnp.ndarray] = None,
+    *,
+    gate_ids: Optional[jnp.ndarray] = None,
+    gate_value=None,
+    valid_mask: Optional[jnp.ndarray] = None,
+    retire=None,
+    out_dtype=None,
 ) -> jnp.ndarray:
     """1-D segmented reduction under a plus or max monoid (float32).
 
@@ -64,20 +84,46 @@ def ref_segmented_reduce(
     ``init`` when given.  Out-of-range ids are dropped.  Empty segments
     yield the monoid identity: 0 for ``"sum"``, ``-inf`` for ``"max"`` —
     the GraphBLAS-lite reduction semantics of :mod:`repro.core.sparse`.
+
+    Fusion-epilogue semantics (authoritative — the Pallas kernels are
+    verified against this): ``gate_ids``/``gate_value`` drop non-matching
+    rows; ``valid_mask`` + ``retire`` overwrite masked-out segments LAST
+    (after the ``init`` fold); ``retire`` defaults to the monoid identity.
+    ``out_dtype`` (``"sum"`` only) accumulates natively in that dtype —
+    integer sums stay exact past 2^24, which is what makes the fused
+    windowed/top-k paths bit-identical to their unfused int32 baselines.
     """
     ok = (seg_ids >= 0) & (seg_ids < num_segments)
+    if gate_ids is not None:
+        ok = ok & (gate_ids == gate_value)
     seg = jnp.where(ok, seg_ids, num_segments)
-    v = vals.astype(jnp.float32)
     if op == "sum":
+        acc_dtype = jnp.float32 if out_dtype is None else jnp.dtype(out_dtype)
+        v = vals.astype(acc_dtype)
         out = jax.ops.segment_sum(
-            jnp.where(ok, v, 0.0), seg, num_segments=num_segments + 1
+            jnp.where(ok, v, jnp.asarray(0, acc_dtype)), seg,
+            num_segments=num_segments + 1,
         )[:num_segments]
-        return out if init is None else init.astype(jnp.float32) + out
+        if init is not None:
+            out = init.astype(acc_dtype) + out
+        if valid_mask is not None:
+            r = 0 if retire is None else retire
+            out = jnp.where(valid_mask, out, jnp.asarray(r, acc_dtype))
+        return out
     if op == "max":
+        if out_dtype is not None:
+            raise ValueError("out_dtype is only supported for op='sum' "
+                             "(the max identity -inf has no integer image)")
+        v = vals.astype(jnp.float32)
         out = jax.ops.segment_max(
             jnp.where(ok, v, -jnp.inf), seg, num_segments=num_segments + 1
         )[:num_segments]
-        return out if init is None else jnp.maximum(init.astype(jnp.float32), out)
+        if init is not None:
+            out = jnp.maximum(init.astype(jnp.float32), out)
+        if valid_mask is not None:
+            r = -jnp.inf if retire is None else retire
+            out = jnp.where(valid_mask, out, jnp.float32(r))
+        return out
     raise ValueError(f"unknown segmented-reduce op {op!r}")
 
 

@@ -37,12 +37,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .defaults import DEFAULT_BLOCK_PROPS, DEFAULT_BLOCK_WIDTH
 from .segreduce import segment_max_pallas
 
 __all__ = ["cms_update_pallas", "hll_update_pallas"]
-
-DEFAULT_BLOCK_PROPS = 1024
-DEFAULT_BLOCK_WIDTH = 512
 
 _NEG_INF = float("-inf")
 

@@ -46,6 +46,41 @@ BACKEND_PEAKS = {
 }
 
 
+def hardware_fingerprint(backend: Optional[str] = None) -> Dict[str, object]:
+    """Coarse identity of the machine a measurement was taken on.
+
+    Embedded in benchmark manifests, autotune tables and perf baselines so
+    regression gates can tell "same box, got slower" (fail) apart from
+    "different box, numbers incomparable" (skip cleanly).  ``cpu_model``
+    comes from ``/proc/cpuinfo`` where available — CI runners and dev
+    containers reliably differ there even when arch and core count match.
+    """
+    import os as _os
+    import platform
+
+    if backend is None:
+        import jax
+
+        backend = jax.default_backend()
+    cpu_model = ""
+    try:
+        with open("/proc/cpuinfo") as f:
+            for line in f:
+                if line.lower().startswith("model name"):
+                    cpu_model = line.split(":", 1)[1].strip()
+                    break
+    except OSError:
+        pass
+    if not cpu_model:
+        cpu_model = platform.processor() or ""
+    return {
+        "backend": backend,
+        "machine": platform.machine(),
+        "cpu_count": _os.cpu_count() or 0,
+        "cpu_model": cpu_model,
+    }
+
+
 def peak_table(backend: Optional[str] = None) -> Dict[str, float]:
     """The peak row for ``backend`` (default: the active jax backend)."""
     if backend is None:

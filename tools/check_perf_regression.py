@@ -1,0 +1,176 @@
+#!/usr/bin/env python3
+"""Perf regression floor vs a committed baseline (stdlib-only, CI gate).
+
+Turns the benchmark lanes' "numbers exist and are finite" gates into real
+floors: the measured roofline fractions (BENCH_queries.json) and the serve
+batch p99 (BENCH_serve.json) are compared against a baseline JSON committed
+under ``benchmarks/baselines/``.  Because absolute walls are only
+comparable on the same machine, every baseline carries the hardware
+fingerprint it was recorded on (``repro.launch.roofline
+.hardware_fingerprint``) and the check SKIPS cleanly — exit 0, with a
+message — when the current run's fingerprint differs.  On matching
+hardware a regression past the tolerance exits 1.
+
+Modes:
+
+    # gate: roofline fractions must stay within --tolerance of baseline
+    python tools/check_perf_regression.py --kind roofline \
+        --current BENCH_queries.json --baseline benchmarks/baselines/perf_cpu.json
+
+    # gate: serve baseline-run p99 must stay within --tolerance of baseline
+    python tools/check_perf_regression.py --kind latency \
+        --current BENCH_serve.json --baseline benchmarks/baselines/perf_cpu.json
+
+    # record: write a new baseline from fresh bench JSONs
+    python tools/check_perf_regression.py --write-baseline \
+        --queries BENCH_queries.json --serve BENCH_serve.json \
+        --out benchmarks/baselines/perf_cpu.json
+
+Tolerances are deliberately loose (roofline: fraction may halve; latency:
+p99 may triple) — shared CI runners are noisy even at fixed hardware, and
+the gate's job is catching order-of-magnitude cliffs (an accidental
+de-fusion, a sort reappearing), not 5% drift.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+BASELINE_SCHEMA = 1
+
+# roofline kernels tracked in the baseline (the CI quick-lane set)
+ROOFLINE_KEYS = ("histogram", "segmented_reduce", "cms_update",
+                 "all14_pipeline")
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _fingerprints_match(current: dict, baseline: dict) -> bool:
+    cur = (current.get("manifest") or {}).get("fingerprint")
+    base = baseline.get("fingerprint")
+    return bool(cur) and bool(base) and cur == base
+
+
+def check_roofline(current: dict, baseline: dict, tolerance: float) -> int:
+    floor_mult = 1.0 - tolerance
+    failures = []
+    for k, base_frac in baseline.get("roofline", {}).items():
+        row = current.get("roofline", {}).get(k)
+        if row is None:
+            failures.append(f"{k}: missing from current run")
+            continue
+        frac = row.get("roofline_fraction")
+        floor = base_frac * floor_mult
+        if frac is None or frac < floor:
+            failures.append(
+                f"{k}: roofline_fraction {frac} < floor {floor:.4f} "
+                f"(baseline {base_frac:.4f}, tolerance {tolerance})")
+        else:
+            print(f"ok {k}: {frac:.4f} >= floor {floor:.4f} "
+                  f"(baseline {base_frac:.4f})")
+    for line in failures:
+        print(f"REGRESSION {line}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+def check_latency(current: dict, baseline: dict, tolerance: float) -> int:
+    base_p99 = baseline.get("latency", {}).get("serve_p99_s")
+    if base_p99 is None:
+        print("baseline has no latency section; nothing to check")
+        return 0
+    try:
+        p99 = current["runs"]["baseline"]["batch_latency"]["p99_s"]
+    except KeyError as e:
+        print(f"REGRESSION serve p99 missing from current run ({e})",
+              file=sys.stderr)
+        return 1
+    ceiling = base_p99 * (1.0 + tolerance)
+    if p99 > ceiling:
+        print(f"REGRESSION serve p99 {p99:.4f}s > ceiling {ceiling:.4f}s "
+              f"(baseline {base_p99:.4f}s, tolerance {tolerance})",
+              file=sys.stderr)
+        return 1
+    print(f"ok serve p99: {p99:.4f}s <= ceiling {ceiling:.4f}s "
+          f"(baseline {base_p99:.4f}s)")
+    return 0
+
+
+def write_baseline(queries_path: str, serve_path: str, out: str) -> int:
+    queries = _load(queries_path)
+    serve = _load(serve_path)
+    fp = (queries.get("manifest") or {}).get("fingerprint")
+    if not fp:
+        print("queries manifest carries no fingerprint; cannot baseline",
+              file=sys.stderr)
+        return 1
+    baseline = {
+        "schema_version": BASELINE_SCHEMA,
+        "fingerprint": fp,
+        "roofline": {
+            k: queries["roofline"][k]["roofline_fraction"]
+            for k in ROOFLINE_KEYS if k in queries.get("roofline", {})
+        },
+        "latency": {
+            "serve_p99_s":
+                serve["runs"]["baseline"]["batch_latency"]["p99_s"],
+        },
+    }
+    with open(out, "w") as f:
+        json.dump(baseline, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {out}: {len(baseline['roofline'])} roofline floors, "
+          f"p99 {baseline['latency']['serve_p99_s']:.4f}s")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--kind", choices=("roofline", "latency"))
+    ap.add_argument("--current", help="fresh BENCH_*.json from this run")
+    ap.add_argument("--baseline",
+                    default="benchmarks/baselines/perf_cpu.json")
+    ap.add_argument("--tolerance", type=float, default=None,
+                    help="allowed fractional slack (default: 0.5 roofline, "
+                         "3.0 latency)")
+    ap.add_argument("--write-baseline", action="store_true")
+    ap.add_argument("--queries", default="BENCH_queries.json")
+    ap.add_argument("--serve", default="BENCH_serve.json")
+    ap.add_argument("--out", default="benchmarks/baselines/perf_cpu.json")
+    args = ap.parse_args()
+
+    if args.write_baseline:
+        return write_baseline(args.queries, args.serve, args.out)
+    if not args.kind or not args.current:
+        ap.error("--kind and --current are required unless --write-baseline")
+
+    try:
+        baseline = _load(args.baseline)
+    except OSError:
+        print(f"no baseline at {args.baseline}; skipping (record one with "
+              "--write-baseline)")
+        return 0
+    if baseline.get("schema_version") != BASELINE_SCHEMA:
+        print(f"baseline schema {baseline.get('schema_version')} != "
+              f"{BASELINE_SCHEMA}; skipping")
+        return 0
+    current = _load(args.current)
+    if not _fingerprints_match(current, baseline):
+        print("hardware fingerprint differs from baseline; skipping "
+              "(walls are not comparable across machines)")
+        print(f"  current:  {(current.get('manifest') or {}).get('fingerprint')}")
+        print(f"  baseline: {baseline.get('fingerprint')}")
+        return 0
+
+    if args.kind == "roofline":
+        tol = 0.5 if args.tolerance is None else args.tolerance
+        return check_roofline(current, baseline, tol)
+    tol = 3.0 if args.tolerance is None else args.tolerance
+    return check_latency(current, baseline, tol)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
